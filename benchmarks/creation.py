@@ -1,0 +1,89 @@
+"""Paper Figure 2: MiniCluster creation+deletion times vs size.
+
+Protocol mirrors §4.1: sizes 8/16/32/64, 20 runs each, one throwaway
+run first so the container image is cached on every host (the paper
+excludes cold pulls).  Claims validated: all sizes ready in under a
+minute, ~5 s variability, weak-linear scaling.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import (FluxMiniCluster, MiniClusterSpec, NetModel,
+                        ResourceGraph, SimClock)
+
+SIZES = (8, 16, 32, 64)
+RUNS = 20
+
+
+def run_once(clock, net, fleet, size, tag):
+    spec = MiniClusterSpec(name=f"bench-{tag}", size=size, max_size=size)
+    mc = FluxMiniCluster(clock, net, fleet, spec)
+    mc.create()
+    t_create = mc.wait_ready()
+    t0 = clock.now
+    done = {}
+    mc.delete(on_deleted=lambda: done.setdefault("t", clock.now))
+    clock.run(stop_when=lambda: "t" in done)
+    return t_create, done["t"] - t0
+
+
+def bench(seed: int = 0):
+    rows = []
+    for size in SIZES:
+        clock = SimClock(seed=seed + size)
+        net = NetModel()
+        fleet = ResourceGraph(n_pods=1, hosts_per_pod=65)
+        # throwaway run: pre-pull the image on every host (paper protocol)
+        big = MiniClusterSpec(name="throwaway", size=64, max_size=64)
+        mc0 = FluxMiniCluster(clock, net, fleet, big)
+        mc0.create()
+        mc0.wait_ready()
+        done = {}
+        mc0.delete(on_deleted=lambda: done.setdefault("t", 1))
+        clock.run(stop_when=lambda: "t" in done)
+
+        totals, creates, deletes = [], [], []
+        for r in range(RUNS):
+            fleet_r = fleet            # same cluster, smaller portions
+            clock.rng.seed(seed * 1000 + size * 100 + r)
+            spec_clock = clock
+            mc = None
+            tc, td = run_once(spec_clock, net, fleet_r, size, f"{size}-{r}")
+            creates.append(tc)
+            deletes.append(td)
+            totals.append(tc + td)
+        rows.append({
+            "size": size,
+            "create_mean": statistics.mean(creates),
+            "create_std": statistics.pstdev(creates),
+            "delete_mean": statistics.mean(deletes),
+            "total_mean": statistics.mean(totals),
+        })
+    return rows
+
+
+def validate(rows):
+    """The paper's claims on this figure."""
+    ok_under_minute = all(r["create_mean"] < 60 for r in rows)
+    ok_jitter = all(r["create_std"] < 8 for r in rows)
+    # weak linear: creation grows sub-linearly vs size (8 -> 64 is 8x
+    # size but << 8x time)
+    growth = rows[-1]["create_mean"] / rows[0]["create_mean"]
+    ok_weak = growth < 2.5
+    return {"under_minute": ok_under_minute, "jitter_ok": ok_jitter,
+            "weak_linear": ok_weak, "growth_8x_size": round(growth, 2)}
+
+
+def main(emit):
+    rows = bench()
+    for r in rows:
+        emit(f"fig2_create_s_size{r['size']}",
+             r["create_mean"] * 1e6,
+             f"mean={r['create_mean']:.1f}s std={r['create_std']:.1f}s "
+             f"delete={r['delete_mean']:.1f}s")
+    v = validate(rows)
+    emit("fig2_claims", 0,
+         f"under_minute={v['under_minute']} jitter_ok={v['jitter_ok']} "
+         f"weak_linear={v['weak_linear']} growth={v['growth_8x_size']}x")
+    return rows

@@ -1,0 +1,55 @@
+"""Paper §3.2/3.3: elasticity + autoscaling timing — how fast a
+MiniCluster responds to scale requests (user patch and metrics-driven),
+and Figure 4's repeated-cost structure (autoscaled nodes re-pay boot +
+image pull)."""
+from __future__ import annotations
+
+from repro.core import (Autoscaler, FluxMetricsPolicy, FluxMiniCluster,
+                        JobSpec, MiniClusterSpec, NetModel, ResourceGraph,
+                        SimClock)
+
+
+def main(emit):
+    clock = SimClock(seed=1)
+    net = NetModel()
+    fleet = ResourceGraph(n_pods=1, hosts_per_pod=65)
+    spec = MiniClusterSpec(name="el", size=4, max_size=64)
+    mc = FluxMiniCluster(clock, net, fleet, spec)
+    mc.create(); mc.wait_ready()
+
+    # user-driven grow 4 -> 32
+    t0 = clock.now
+    mc.patch_size(32)
+    clock.run(stop_when=lambda: mc.pool.n_up() >= 32)
+    grow = clock.now - t0
+    emit("elastic_grow_4_to_32_s", grow * 1e6,
+         f"{grow:.1f}s (includes cold image pulls on new hosts: Fig 4 "
+         f"repeated cost)")
+
+    # grow again over the SAME hosts: warm (image cached)
+    mc.patch_size(8)
+    clock.run(stop_when=lambda: mc.pool.n_up() <= 8)
+    t0 = clock.now
+    mc.patch_size(32)
+    clock.run(stop_when=lambda: mc.pool.n_up() >= 32)
+    warm = clock.now - t0
+    emit("elastic_grow_warm_s", warm * 1e6,
+         f"{warm:.1f}s warm vs {grow:.1f}s cold (image cache)")
+
+    # shrink latency
+    t0 = clock.now
+    mc.patch_size(4)
+    clock.run(stop_when=lambda: mc.pool.n_up() <= 4)
+    emit("elastic_shrink_32_to_4_s", (clock.now - t0) * 1e6,
+         f"{clock.now - t0:.1f}s; lead broker rank0 protected")
+
+    # autoscaler reaction time: queue burst -> first scale decision
+    auto = Autoscaler(clock, mc, FluxMetricsPolicy(max_size=64),
+                      interval=15)
+    auto.start()
+    t0 = clock.now
+    for _ in range(30):
+        mc.instance.submit(JobSpec(n_nodes=2, walltime=120))
+    clock.run(stop_when=lambda: bool(auto.decisions))
+    emit("autoscale_reaction_s", (clock.now - t0) * 1e6,
+         f"queue-depth metric -> patch in {clock.now - t0:.1f}s")

@@ -1,0 +1,46 @@
+"""Per-kernel microbenchmarks: ref path wall time on this host +
+analytic FLOPs (the TPU Pallas path is validated in interpret mode by
+tests; wall-clock kernel timing requires real TPU hardware)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def main(emit):
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    b, s, h, hk, d = 2, 512, 8, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hk, d), jnp.float32)
+
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="ref"))
+    t = _time(fa, q, k, v)
+    flops = 4 * b * s * s * h * d / 2
+    emit("kernel_flash_attention_ref", t * 1e6,
+         f"B{b}xS{s}xH{h} gqa{h//hk} {flops/t/1e9:.1f} GFLOP/s host")
+
+    qd = q[:, :1]
+    da = jax.jit(lambda q, k, v: ops.decode_attention(q, k, v, s,
+                                                      impl="ref"))
+    t = _time(da, qd, k, v)
+    emit("kernel_decode_attention_ref", t * 1e6, f"S_cache={s}")
+
+    x = jax.random.normal(ks[0], (b * s, 1024), jnp.float32)
+    w = jnp.ones((1024,), jnp.float32)
+    rn = jax.jit(lambda x, w: ops.rmsnorm(x, w, impl="ref"))
+    t = _time(rn, x, w)
+    emit("kernel_rmsnorm_ref", t * 1e6, f"rows={b*s} d=1024")

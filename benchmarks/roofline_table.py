@@ -1,0 +1,42 @@
+"""Deliverable (g): roofline terms per (arch x shape x mesh) from the
+dry-run artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = "experiments/dryrun"
+
+
+def rows(mesh=None, strategy=None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        d = json.load(open(f))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if strategy and d.get("strategy") != strategy:
+            continue
+        out.append(d)
+    return out
+
+
+def main(emit):
+    n = 0
+    for d in rows():
+        tag = f"{d.get('arch')}__{d.get('shape')}__{d.get('mesh')}" \
+              f"__{d.get('strategy')}"
+        if d.get("skipped"):
+            emit(f"roofline_{tag}", 0, f"SKIPPED: {d['skipped']}")
+            continue
+        r = d.get("roofline")
+        if not r:
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline_{tag}", bound * 1e6,
+             f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+             f"tc={r['t_compute_s']:.2e} tm={r['t_memory_s']:.2e} "
+             f"tx={r['t_collective_s']:.2e} "
+             f"mem={r['memory_per_device_bytes']['total_live']/2**30:.1f}GiB")
+        n += 1
+    emit("roofline_cells_total", n, "cells with full dry-run artifacts")

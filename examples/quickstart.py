@@ -1,0 +1,44 @@
+"""Quickstart: bring up a Flux MiniCluster on a simulated fleet, submit
+training jobs for three different architectures, and watch the queue.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (FluxMiniCluster, JaxWorkloadExecutor, JobSpec,
+                        MiniClusterSpec, NetModel, ResourceGraph, SimClock)
+
+
+def main():
+    clock = SimClock(seed=0)
+    net = NetModel()
+    # a 2-pod fleet, 16 hosts per pod, 4 chips per host
+    fleet = ResourceGraph(n_pods=2, hosts_per_pod=16)
+
+    # declarative MiniCluster: 8 nodes now, head-room to 16
+    spec = MiniClusterSpec(name="quickstart", size=8, max_size=16)
+    executor = JaxWorkloadExecutor(clock, net, steps=1)
+    mc = FluxMiniCluster(clock, net, fleet, spec, executor=executor)
+    mc.create()
+    t_ready = mc.wait_ready()
+    print(f"MiniCluster ready in {t_ready:.1f}s "
+          f"({mc.pool.n_up()} brokers up)")
+
+    # submit real JAX training jobs (reduced configs run on this host)
+    jobs = []
+    for arch, nodes in [("yi-6b", 4), ("granite-moe-1b-a400m", 2),
+                        ("lammps-proxy", 2)]:
+        jobs.append(mc.instance.submit(
+            JobSpec(n_nodes=nodes, walltime=60, command=arch,
+                    user="quickstart")))
+        print(f"submitted job {jobs[-1].jobid}: {arch} on {nodes} nodes")
+
+    clock.run(until=clock.now + 600)
+    for j in jobs:
+        wall = (j.t_done - j.t_run) if j.t_done else None
+        print(f"job {j.jobid} [{j.spec.command:22s}] -> {j.result} "
+              f"(wall {wall:.2f}s sim)")
+    print("queue stats:", mc.instance.queue.stats())
+    print("metrics:", mc.instance.metrics())
+
+
+if __name__ == "__main__":
+    main()

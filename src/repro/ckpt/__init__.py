@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import (  # noqa: F401
+    CheckpointManager, restore_resharded, restore_state, save_state,
+)

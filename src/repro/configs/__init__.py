@@ -1,0 +1,6 @@
+from repro.configs.base import (  # noqa: F401
+    BASELINE, OPTIMIZED, SHAPES, STRATEGIES, ZERO3, MambaConfig, ModelConfig, MoEConfig,
+    ShardingStrategy, TrainConfig, WorkloadShape, XLSTMConfig, replace,
+    shape_applicable,
+)
+from repro.configs.registry import ARCH_IDS, EXTRA_IDS, all_configs, get, smoke  # noqa: F401

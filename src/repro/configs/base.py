@@ -1,0 +1,294 @@
+"""Configuration dataclasses for models, workload shapes and runs.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the four
+assigned input shapes are ``WorkloadShape``s.  A (ModelConfig, WorkloadShape,
+MeshSpec, ShardingStrategy) tuple fully determines one dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# --------------------------------------------------------------------------
+# Sub-configs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings (token-choice top-k, capacity dispatch)."""
+
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    # Apply MoE to every ``every``-th position of the block pattern (1 = all).
+    every: int = 1
+    # Arctic-style parallel dense residual FFN next to the MoE branch.
+    dense_residual: bool = False
+    d_ff_dense: int = 0
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Jamba-style Mamba (selective SSM) block settings."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block settings (mLSTM matrix memory / sLSTM scalar memory)."""
+
+    n_heads: int = 4
+    expand: int = 2          # up-projection factor inside the cell
+    d_conv: int = 4          # causal conv in mLSTM pre-projection
+    chunk_size: int = 64     # chunkwise-parallel training chunk
+
+
+# --------------------------------------------------------------------------
+# Model config
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    d_head: int = 0                  # 0 -> d_model // n_heads
+
+    # --- attention details ---
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0       # chatglm3 2d-RoPE: rotate half the head dim
+    qkv_bias: bool = False
+    causal: bool = True
+
+    # --- norm / mlp / positions ---
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    pos_type: str = "rope"           # rope | sinusoidal | none
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # --- block pattern ---
+    # The layer stack is ``n_layers`` long; kinds cycle through this pattern
+    # (super-block).  n_layers must be divisible by len(block_pattern).
+    block_pattern: Tuple[str, ...] = ("attn",)   # attn | mamba | mlstm | slstm
+
+    # --- family extensions ---
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0          # >0 -> enc-dec with cross attention
+    encoder_seq_divisor: int = 1     # encoder frames = seq_len // divisor
+
+    # --- modality frontend stub ---
+    frontend: Optional[str] = None   # audio | vision | None
+
+    # --- optimizer choice (production default per arch) ---
+    optimizer: str = "adamw"         # adamw | adafactor
+    opt_state_dtype: str = "float32"  # float32 | bfloat16 (memory pressure)
+
+    # --- provenance ---
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def pattern_len(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_repeats(self) -> int:
+        assert self.n_layers % self.pattern_len == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern of length {self.pattern_len}")
+        return self.n_layers // self.pattern_len
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k != "attn" for k in self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if context cost does not grow quadratically (SSM / hybrid)."""
+        return any(k in ("mamba", "mlstm", "slstm") for k in self.block_pattern)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings included once)."""
+        d, h, kv, hd = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        total = self.vocab_size * d                      # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d                 # lm head
+        def attn_params() -> int:
+            p = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+            if self.qkv_bias:
+                p += h * hd + 2 * kv * hd
+            return p
+        def mlp_params(dff: int) -> int:
+            if dff == 0:
+                return 0
+            n_in = 2 if self.mlp_type == "swiglu" else 1
+            return n_in * d * dff + dff * d
+        def mamba_params() -> int:
+            mc = self.mamba or MambaConfig()
+            d_in = mc.expand * d
+            dtr = mc.dt_rank or -(-d // 16)
+            return (d * 2 * d_in + d_in * mc.d_conv
+                    + d_in * (dtr + 2 * mc.d_state) + dtr * d_in
+                    + d_in * mc.d_state + d_in + d_in * d)
+        def xlstm_params(kind: str) -> int:
+            xc = self.xlstm or XLSTMConfig()
+            d_in = xc.expand * d
+            if kind == "mlstm":
+                return (d * 2 * d_in + d_in * xc.d_conv + 3 * d_in * d_in // 1
+                        + 3 * xc.n_heads * (d_in // xc.n_heads)  # gates
+                        + d_in * d)
+            return (4 * d * d_in + 4 * d_in * (d_in // xc.n_heads)
+                    + d_in * d)
+        for i, kind in enumerate(self.block_pattern):
+            reps = self.n_repeats
+            if kind == "attn":
+                blk = attn_params()
+            elif kind == "mamba":
+                blk = mamba_params()
+            elif kind in ("mlstm", "slstm"):
+                blk = xlstm_params(kind)
+            else:
+                raise ValueError(kind)
+            # feed-forward / moe on this position
+            if self.moe is not None and (i % self.moe.every) == (self.moe.every - 1):
+                blk += self.moe.n_experts * mlp_params(self.moe.d_ff_expert) // 1
+                blk += self.d_model * self.moe.n_experts  # router
+                if self.moe.dense_residual:
+                    blk += mlp_params(self.moe.d_ff_dense)
+            elif kind == "attn" or kind == "mamba":
+                blk += mlp_params(self.d_ff)
+            total += blk * reps
+        # encoder stack (attention + mlp, non-causal, cross-attn in decoder)
+        if self.encoder_layers:
+            enc = (attn_params() + mlp_params(self.d_ff)) * self.encoder_layers
+            xattn = attn_params() * self.n_layers   # decoder cross-attention
+            total += enc + xattn
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.n_params()
+        full = self.n_params()
+        def mlp_params(dff: int) -> int:
+            n_in = 2 if self.mlp_type == "swiglu" else 1
+            return n_in * self.d_model * dff + dff * self.d_model
+        n_moe_layers = sum(1 for i in range(self.n_layers)
+                           if (i % self.moe.every) == (self.moe.every - 1))
+        inactive = (self.moe.n_experts - self.moe.top_k) * \
+            mlp_params(self.moe.d_ff_expert) * n_moe_layers
+        return full - inactive
+
+
+# --------------------------------------------------------------------------
+# Workload shapes
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkloadShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k":    WorkloadShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": WorkloadShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  WorkloadShape("decode_32k", "decode", 32_768, 128),
+    "long_500k":   WorkloadShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: WorkloadShape) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason when skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (quadratic)"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Training / run config
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    param_dtype: str = "float32"      # master params
+    compute_dtype: str = "bfloat16"
+    grad_accum: int = 1
+    remat: bool = True
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ShardingStrategy:
+    """Named sharding strategy; see dist/sharding.py for the rule tables."""
+
+    name: str = "baseline"
+    # baseline : DP over data(+pod), TP over model, ZeRO-1 opt states.
+    # fsdp     : + params/grads sharded over data (ZeRO-3), seq-parallel
+    #            residual stream, EP experts, sharded KV caches.
+    fsdp_params: bool = False
+    seq_shard_activations: bool = False
+    expert_parallel: bool = True
+    # decode-time KV cache sequence sharding axis ("model" | "none")
+    kv_seq_axis: str = "model"
+    # hierarchical two-phase collective schedule over (pod, data)
+    hierarchical_collectives: bool = False
+    # int8 error-feedback compression on cross-pod gradient reduction
+    compress_cross_pod: bool = False
+    # tensor parallelism over the model axis; when False the model axis
+    # becomes a second FSDP/data axis (pure ZeRO-3 over all 256 chips)
+    tensor_parallel: bool = True
+
+
+BASELINE = ShardingStrategy(name="baseline")
+OPTIMIZED = ShardingStrategy(
+    name="optimized", fsdp_params=True, seq_shard_activations=True,
+    expert_parallel=True, hierarchical_collectives=True)
+# beyond-paper: all 256 chips as one FSDP domain; params gathered bf16
+# per layer, activations fully local (1 batch row per chip at gb=256)
+ZERO3 = ShardingStrategy(
+    name="zero3", fsdp_params=True, seq_shard_activations=False,
+    expert_parallel=True, tensor_parallel=False)
+
+STRATEGIES = {"baseline": BASELINE, "optimized": OPTIMIZED,
+              "zero3": ZERO3}
+
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)

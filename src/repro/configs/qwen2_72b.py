@@ -1,0 +1,32 @@
+"""qwen2-72b [dense] — GQA with QKV bias.
+
+[arXiv:2407.10671; hf:Qwen/Qwen2-72B]
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="arXiv:2407.10671; hf",
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab_size=512,
+    qkv_bias=True,
+)

@@ -1,0 +1,19 @@
+"""The paper's contribution: an on-demand workload manager (Flux) as an
+operator over a TPU fleet, with TBON broker overlay, Fluxion graph
+scheduling, elasticity, autoscaling, bursting, queue state migration,
+and fault tolerance — plus the MPI Operator baseline it is evaluated
+against."""
+from repro.core.autoscaler import Autoscaler, FluxMetricsPolicy, HPAPolicy  # noqa: F401
+from repro.core.broker import BrokerPool, BrokerState, TBON  # noqa: F401
+from repro.core.burst import BurstService, make_plugin  # noqa: F401
+from repro.core.executor import JaxWorkloadExecutor  # noqa: F401
+from repro.core.fault import StragglerMitigator, kill_node, make_straggler  # noqa: F401
+from repro.core.instance import FluxInstance  # noqa: F401
+from repro.core.jobspec import Job, JobSpec, JobState  # noqa: F401
+from repro.core.minicluster import MiniClusterSpec  # noqa: F401
+from repro.core.mpi_operator import MPIJob  # noqa: F401
+from repro.core.queue import JobQueue  # noqa: F401
+from repro.core.reconciler import FluxMiniCluster  # noqa: F401
+from repro.core.resource_graph import ResourceGraph, ResourceSet  # noqa: F401
+from repro.core.sim import NetModel, SimClock  # noqa: F401
+from repro.core.state import Archive, restore_state, save_state  # noqa: F401

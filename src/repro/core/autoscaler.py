@@ -1,0 +1,93 @@
+"""Autoscaling: HPA-style utilization policy vs the Flux metrics API.
+
+The paper's progression: a default HorizontalPodAutoscaler on CPU
+utilization is "not fine-tuned enough" for queued HPC work, so a
+custom metrics API served FROM THE LEAD BROKER exposes queue-aware
+signals and the autoscaler acts on those.  Both are implemented here
+against the same patch path (``FluxMiniCluster.patch_size``), mirroring
+the paper's note that user-, application- and autoscaler-initiated
+scaling all share one validation/patch code path.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.reconciler import FluxMiniCluster
+from repro.core.sim import SimClock
+
+
+@dataclass
+class HPAPolicy:
+    """Kubernetes HPA algorithm: desired = ceil(current * util / target)."""
+
+    target_utilization: float = 0.7
+    min_size: int = 1
+    max_size: int = 64
+
+    def desired(self, mc: FluxMiniCluster) -> int:
+        util = mc.instance.graph.utilization()
+        cur = max(mc.pool.n_up(), 1)
+        want = math.ceil(cur * util / self.target_utilization)
+        return max(self.min_size, min(self.max_size, want,
+                                      mc.spec.effective_max))
+
+
+@dataclass
+class FluxMetricsPolicy:
+    """Custom metrics API: scale from queue contents, not CPU.
+
+    desired = running-node demand + backlog demand, where backlog demand
+    converts queued node-seconds into nodes assuming a horizon.
+    """
+
+    horizon_s: float = 60.0
+    min_size: int = 1
+    max_size: int = 64
+
+    def desired(self, mc: FluxMiniCluster) -> int:
+        m = mc.instance.metrics()
+        running_nodes = sum(
+            j.spec.n_nodes for j in mc.instance.queue.running())
+        backlog_nodes = math.ceil(
+            m["backlog_node_seconds"] / self.horizon_s)
+        want = running_nodes + backlog_nodes
+        return max(self.min_size,
+                   min(self.max_size, want, mc.spec.effective_max))
+
+
+class Autoscaler:
+    def __init__(self, clock: SimClock, mc: FluxMiniCluster, policy,
+                 interval: float = 15.0, stabilization: float = 60.0):
+        self.clock = clock
+        self.mc = mc
+        self.policy = policy
+        self.interval = interval
+        self.stabilization = stabilization     # scale-down damping (HPA)
+        self._last_scale_down = -1e9
+        self.decisions = []
+        self._running = False
+
+    def start(self):
+        if not self._running:
+            self._running = True
+            self.clock.call_in(self.interval, self._tick)
+
+    def stop(self):
+        self._running = False
+
+    def _tick(self):
+        if not self._running:
+            return
+        want = self.policy.desired(self.mc)
+        cur = self.mc._desired
+        if want > cur:
+            self.mc.patch_size(want)
+            self.decisions.append((self.clock.now, cur, want))
+        elif want < cur:
+            if self.clock.now - self._last_scale_down >= self.stabilization:
+                self.mc.patch_size(want)
+                self._last_scale_down = self.clock.now
+                self.decisions.append((self.clock.now, cur, want))
+        self.clock.call_in(self.interval, self._tick)

@@ -1,0 +1,150 @@
+"""A Flux instance: brokers + scheduler + queue on a resource graph.
+
+The lead broker (rank 0) owns the queue and the Fluxion matcher; jobs
+submitted through the instance go DEPEND->PRIORITY->SCHED->RUN->
+CLEANUP->INACTIVE.  Job execution is delegated to an executor callback
+(real JAX steps on a sub-mesh, or modeled walltime), so orchestration
+benchmarks and end-to-end examples share this code.
+
+Instances are hierarchical: ``spawn_subinstance`` carves a subgraph and
+returns a child instance that schedules within it (Flux's defining
+feature; the operator maps it onto pod-slice sub-meshes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.broker import BrokerPool, BrokerState
+from repro.core.jobspec import Job, JobSpec, JobState
+from repro.core.queue import JobQueue
+from repro.core.resource_graph import ResourceGraph, ResourceSet
+from repro.core.sim import NetModel, SimClock
+
+# executor: (job, rset, done_cb(result, actual_walltime)) -> None
+Executor = Callable[[Job, ResourceSet, Callable[[str, float], None]], None]
+
+
+class FluxInstance:
+    def __init__(self, clock: SimClock, net: NetModel,
+                 graph: ResourceGraph, pool: BrokerPool,
+                 executor: Optional[Executor] = None,
+                 match_policy: str = "first_fit", name: str = "flux0"):
+        self.clock = clock
+        self.net = net
+        self.graph = graph
+        self.pool = pool
+        self.queue = JobQueue()
+        self.executor = executor or self._sim_executor
+        self.match_policy = match_policy
+        self.name = name
+        self.children: List["FluxInstance"] = []
+        pool.on_lost.append(self._on_node_lost)
+        self._paused = False
+        self._ingest_busy_until = 0.0
+
+    # -- submission (flux submit) -------------------------------------------
+    def submit(self, spec: JobSpec, rank: int = 0) -> Job:
+        """Submit from ``rank``; the RPC routes up the TBON to the lead,
+        which ingests submissions serially (its throughput bound)."""
+        job = Job(spec=spec)
+        arrival = self.clock.now + self.pool.rpc_cost(rank)
+        start = max(arrival, self._ingest_busy_until)
+        self._ingest_busy_until = start + self.net.broker_submit_cost
+        self.clock.call_at(self._ingest_busy_until, self._enqueue, job)
+        return job
+
+    def _enqueue(self, job: Job):
+        self.queue.submit(job, self.clock.now)
+        self.clock.trace("job_submitted", jobid=job.jobid)
+        self.clock.call_in(self.net.sched_cycle, self.schedule_loop)
+
+    # -- scheduling (Fluxion) -----------------------------------------------
+    def schedule_loop(self):
+        if self._paused:
+            return
+        for job in self.queue.schedulable():
+            rset = self.graph.match(job.spec.n_nodes,
+                                    policy=self.match_policy)
+            if rset is None:
+                if job.spec.burstable:
+                    continue         # a bursting plugin may take it
+                continue
+            self.graph.alloc(rset, job.jobid)
+            job.allocation = rset
+            job.t_sched = self.clock.now
+            job.transition(JobState.RUN)
+            job.t_run = self.clock.now
+            self.clock.trace("job_run", jobid=job.jobid,
+                             hosts=list(rset.hosts))
+            self.executor(job, rset, self._make_done(job))
+
+    def _make_done(self, job: Job):
+        def done(result: str, walltime: float):
+            if job.state != JobState.RUN:
+                return                  # canceled/lost meanwhile
+            job.transition(JobState.CLEANUP)
+            job.result = result
+            job.t_done = self.clock.now
+            self.graph.free(job.jobid)
+            self.queue.fairshare.charge(
+                job.spec.user, job.spec.n_nodes * walltime)
+            job.transition(JobState.INACTIVE)
+            self.clock.trace("job_done", jobid=job.jobid, result=result)
+            self.clock.call_in(self.net.sched_cycle, self.schedule_loop)
+        return done
+
+    def _sim_executor(self, job: Job, rset: ResourceSet, done):
+        self.clock.call_in(job.spec.walltime, done, "completed",
+                           job.spec.walltime)
+
+    # -- fault handling -------------------------------------------------------
+    def _on_node_lost(self, rank: int):
+        """Heartbeat-declared node death: requeue jobs touching the host."""
+        b = self.pool.brokers[rank]
+        host = b.host
+        for job in list(self.queue.running()):
+            if job.allocation and host in job.allocation.hosts:
+                self.graph.free(job.jobid)
+                job.allocation = None
+                job.state = JobState.SCHED      # requeue (restart from ckpt)
+                job.requeues += 1
+                self.clock.trace("job_requeued", jobid=job.jobid,
+                                 lost_rank=rank)
+        if host is not None:
+            self.graph.set_state(host, "down")
+        self.clock.call_in(self.net.sched_cycle, self.schedule_loop)
+
+    # -- queue control (save/restore support) ---------------------------------
+    def pause(self):
+        self._paused = True
+
+    def resume(self):
+        self._paused = False
+        self.clock.call_in(self.net.sched_cycle, self.schedule_loop)
+
+    def drain(self, host: int):
+        self.graph.set_state(host, "draining")
+
+    # -- hierarchy -------------------------------------------------------------
+    def spawn_subinstance(self, rset: ResourceSet,
+                          executor: Optional[Executor] = None
+                          ) -> "FluxInstance":
+        sub_graph = self.graph.subgraph(rset, f"{self.name}.sub")
+        sub_pool = BrokerPool(self.clock, self.net, rset.n_hosts,
+                              fanout=self.pool.tbon.k)
+        child = FluxInstance(self.clock, self.net, sub_graph, sub_pool,
+                             executor or self.executor,
+                             self.match_policy, name=f"{self.name}.sub")
+        self.children.append(child)
+        return child
+
+    # -- metrics (the Flux metrics API surface) ---------------------------------
+    def metrics(self) -> Dict:
+        return {
+            "queue_depth": self.queue.depth(),
+            "backlog_node_seconds": self.queue.backlog_node_seconds(),
+            "n_up": self.pool.n_up(),
+            "utilization": self.graph.utilization(),
+            "running": len(self.queue.running()),
+        }

@@ -1,0 +1,34 @@
+"""Process-wide tracing flags.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so a scanned 80-layer model reports ~1 layer of FLOPs/collectives.
+The dry-run therefore compiles TWICE per cell: the full rolled model
+(memory analysis; fast compile; real remat behaviour) plus a single
+super-block "probe" whose cost is added (R-1) more times.  Inside the
+probe and the full model, INNER streaming loops (flash-attention KV
+blocks, SSM chunk scans) are unrolled with their trip count capped at
+8 (REPRO_DRYRUN_INNER=1) so their cost is exact in both compiles.
+
+Runtime paths (tests, examples, benchmarks) keep everything rolled.
+"""
+from __future__ import annotations
+
+import os
+
+
+def dryrun_inner() -> bool:
+    return os.environ.get("REPRO_DRYRUN_INNER", "0") == "1"
+
+
+def scan_unroll():
+    """lax.scan(unroll=...) for INNER streaming loops only."""
+    return True if dryrun_inner() else 1
+
+
+def inner_blocks(seq: int, default_block: int, max_unrolled: int = 8) -> int:
+    """Block size for inner streaming loops: when the dry-run unrolls
+    them, cap the trip count at ``max_unrolled`` so the HLO stays
+    compilable; otherwise use the memory-optimal default."""
+    if dryrun_inner():
+        return max(default_block, -(-seq // max_unrolled))
+    return default_block

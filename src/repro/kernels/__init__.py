@@ -1,0 +1,3 @@
+# Pallas TPU kernels for compute hot-spots; ops.py dispatches
+# pallas-on-TPU / interpret-in-tests / jnp-ref-on-CPU.
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,98 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+Grid (batch, kv_head, kv_blocks): the g query heads sharing a kv head
+are processed together as a (g, d) tile (they read the same KV block —
+one HBM stream serves g heads, the decode-bandwidth optimization that
+matters at 32k-512k contexts).  Running max/normalizer live in VMEM
+scratch across the kv sweep; positions >= cache_len are masked, and
+whole blocks past cache_len are skipped (@pl.when) so decode cost
+scales with the FILLED cache, not the allocated buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BKV = 512
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, bkv, g):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    cache_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * bkv < cache_len)          # skip blocks past the fill
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # g x d
+        k = k_ref[0, 0].astype(jnp.float32)            # bkv x d
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ki * bkv + jax.lax.broadcasted_iota(
+            jnp.int32, (g, bkv), 1)
+        s = jnp.where(kpos < cache_len, s, NEG_INF)    # g x bkv
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bkv", "interpret"))
+def decode_attention_kernel(q, k, v, cache_len, *, scale=None,
+                            bkv=DEFAULT_BKV, interpret=False):
+    """q: (B, 1, H, D); k, v: (B, S, Hkv, D); cache_len: scalar int."""
+    b, one, h, d = q.shape
+    _, smax, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale or d ** -0.5
+    bkv = min(bkv, smax)
+    pk = (-smax) % bkv
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    kp = kp.transpose(0, 2, 1, 3)                       # B Hkv S D
+    vp = vp.transpose(0, 2, 1, 3)
+    qg = q[:, 0].reshape(b, hkv, g, d)                  # B Hkv g D
+    nk = kp.shape[2] // bkv
+    lens = jnp.full((1,), cache_len, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bkv=bkv, g=g),
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, hk, ki: (b_, hk, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, hk, ki:
+                         (b_, hk, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, hk, ki:
+                         (b_, hk, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, hk, ki:
+                               (b_, hk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+        interpret=interpret,
+    )(lens, qg, kp, vp)
+    return out.reshape(b, 1, h, d)

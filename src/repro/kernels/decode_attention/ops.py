@@ -1,0 +1,9 @@
+"""jit'd wrapper for the flash-decode kernel (inference only: no VJP)."""
+from __future__ import annotations
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+def decode_attention(q, k, v, cache_len, *, scale=None, interpret=False):
+    return decode_attention_kernel(q, k, v, cache_len, scale=scale,
+                                   interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache.
+
+q: (B, 1, H, D); k, v: (B, S_max, Hkv, D); cache_len: scalar int —
+positions >= cache_len are masked out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k, v, cache_len, *, scale=None):
+    b, sq, h, d = q.shape
+    _, smax, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale or d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(smax)
+    valid = pos < cache_len
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

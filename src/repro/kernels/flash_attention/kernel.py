@@ -1,0 +1,345 @@
+"""Pallas TPU flash attention (fwd + bwd), GQA-native.
+
+Tiling: grid (batch, q_head, q_blocks, kv_blocks), kv innermost so the
+running max/normalizer/accumulator live in VMEM scratch across the kv
+sweep.  Block shapes default to (128, head_dim) — MXU-aligned (128
+lanes) and sized so q/k/v/acc tiles fit VMEM comfortably:
+  bq*d + bkv*d (k) + bkv*d (v) + bq*bkv (scores) + bq*d (acc) floats
+  = 128*128*5 + 128*128  ~ 400 KiB  << 16 MiB VMEM.
+GQA is native: q head h reads kv head h // (H // Hkv) via the k/v
+index_maps — no KV repetition (the jnp ref repeats instead, which is
+SPMD-friendlier; the kernel is the TPU fast path).
+
+Causal blocks above the diagonal are skipped with @pl.when (zero MXU
+work), which is where the kernel beats the XLA ref: the ref's scan
+computes the full rectangle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, scale, causal, bq, bkv,
+                seq_q, seq_kv, q_offset):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_last = qi * bq + bq - 1 + q_offset
+    k_first = ki * bkv
+    skip = causal and (k_first > q_last)
+
+    @pl.when(jnp.logical_not(skip) if causal else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # bq x d
+        k = k_ref[0, 0].astype(jnp.float32)          # bkv x d
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # bq x bkv
+        qpos = qi * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 0) + q_offset
+        kpos = ki * bkv + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 1)
+        valid = kpos < seq_kv
+        if causal:
+            valid = jnp.logical_and(valid, kpos <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[...] + jnp.log(l))[:, 0:1].astype(
+            lse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq",
+                                             "bkv", "q_offset",
+                                             "interpret"))
+def flash_fwd(q, k, v, *, causal=True, scale=None, bq=DEFAULT_BQ,
+              bkv=DEFAULT_BKV, q_offset=0, interpret=False):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D). Returns (out, lse)."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale or d ** -0.5
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    # pad seq to block multiples
+    pq = (-sq) % bq
+    pk = (-skv) % bkv
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    qp = qp.transpose(0, 2, 1, 3)         # B H S D
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+    nq, nk = qp.shape[2] // bq, kp.shape[2] // bkv
+
+    grid = (b, h, nq, nk)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                          bq=bq, bkv=bkv, seq_q=sq, seq_kv=skv,
+                          q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki:
+                         (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, h_, qi, ki, g=g:
+                         (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, h_, qi, ki, g=g:
+                         (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki:
+                         (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, qi, ki:
+                         (b_, h_, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, qp.shape[2], d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, qp.shape[2], 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    out = out.transpose(0, 2, 1, 3)[:, :sq]
+    lse = lse.transpose(0, 2, 1, 3)[:, :sq, :, 0]     # B Sq H
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: dq pass (grid q x kv) and dkv pass (grid kv x q)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, scale, causal, bq, bkv, seq_q, seq_kv,
+               q_offset):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_last = qi * bq + bq - 1 + q_offset
+    k_first = ki * bkv
+    skip = causal and (k_first > q_last)
+
+    @pl.when(jnp.logical_not(skip) if causal else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = qi * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 0) + q_offset
+        kpos = ki * bkv + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 1)
+        qraw = qi * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 0)
+        valid = jnp.logical_and(kpos < seq_kv, qraw < seq_q)
+        if causal:
+            valid = jnp.logical_and(valid, kpos <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, 0])               # bq x bkv
+        do = do_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0]) * scale
+        acc_scr[...] += jax.lax.dot(ds.astype(k.dtype), k,
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        dq_ref[0, 0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, bq,
+                bkv, seq_q, seq_kv, q_offset, g):
+    b_, hk, ki, qi = (pl.program_id(i) for i in range(4))
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_last = qi * bq + bq - 1 + q_offset
+    k_first = ki * bkv
+    skip = causal and (k_first > q_last)
+
+    @pl.when(jnp.logical_not(skip) if causal else True)
+    def _compute():
+        # loop over the g query heads sharing this kv head
+        for j in range(g):
+            q = q_ref[0, 0, j].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k_ref[0, 0].astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale
+            qpos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 0) + q_offset
+            kpos = ki * bkv + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 1)
+            qraw = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 0)
+            valid = jnp.logical_and(kpos < seq_kv, qraw < seq_q)
+            if causal:
+                valid = jnp.logical_and(valid, kpos <= qpos)
+            s = jnp.where(valid, s, NEG_INF)
+            p = jnp.exp(s - lse_ref[0, 0, j])
+            do = do_ref[0, 0, j].astype(jnp.float32)
+            dv_scr[...] += jax.lax.dot_general(
+                p, do, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dp = jax.lax.dot_general(
+                do, v_ref[0, 0].astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            ds = p * (dp - delta_ref[0, 0, j]) * scale
+            dk_scr[...] += jax.lax.dot_general(
+                ds, q, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(qi == nq - 1)
+    def _finish():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq",
+                                             "bkv", "q_offset",
+                                             "interpret"))
+def flash_bwd(q, k, v, out, lse, do, *, causal=True, scale=None,
+              bq=DEFAULT_BQ, bkv=DEFAULT_BKV, q_offset=0,
+              interpret=False):
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale or d ** -0.5
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    pq, pk = (-sq) % bq, (-skv) % bkv
+    delta = (out.astype(jnp.float32) * do.astype(jnp.float32)).sum(-1)
+
+    def padq(x):
+        return jnp.pad(x, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else x
+
+    def padk(x):
+        return jnp.pad(x, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else x
+
+    qp = padq(q).transpose(0, 2, 1, 3)
+    kp = padk(k).transpose(0, 2, 1, 3)
+    vp = padk(v).transpose(0, 2, 1, 3)
+    dop = padq(do).transpose(0, 2, 1, 3)
+    lsep = (jnp.pad(lse, ((0, 0), (0, pq), (0, 0))) if pq else lse)
+    lsep = lsep.transpose(0, 2, 1)[..., None]          # B H S 1
+    dlt = (jnp.pad(delta, ((0, 0), (0, pq), (0, 0))) if pq else delta)
+    dlt = dlt.transpose(0, 2, 1)[..., None]
+    nq, nk = qp.shape[2] // bq, kp.shape[2] // bkv
+
+    # --- dq ---
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal, bq=bq,
+                          bkv=bkv, seq_q=sq, seq_kv=skv,
+                          q_offset=q_offset),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, h_, qi, ki, g=g:
+                         (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, h_, qi, ki, g=g:
+                         (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, qp.shape[2], d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, dlt)
+    dq = dq.transpose(0, 2, 1, 3)[:, :sq]
+
+    # --- dk/dv (grid over kv heads; inner loop over the g q-heads) ---
+    qg = qp.reshape(b, hkv, g, qp.shape[2], d)
+    dog = dop.reshape(b, hkv, g, qp.shape[2], d)
+    lseg = lsep.reshape(b, hkv, g, qp.shape[2], 1)
+    dltg = dlt.reshape(b, hkv, g, qp.shape[2], 1)
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal, bq=bq,
+                          bkv=bkv, seq_q=sq, seq_kv=skv,
+                          q_offset=q_offset, g=g),
+        grid=(b, hkv, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, bq, d), lambda b_, hk, ki, qi:
+                         (b_, hk, 0, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, hk, ki, qi:
+                         (b_, hk, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, hk, ki, qi:
+                         (b_, hk, ki, 0)),
+            pl.BlockSpec((1, 1, g, bq, d), lambda b_, hk, ki, qi:
+                         (b_, hk, 0, qi, 0)),
+            pl.BlockSpec((1, 1, g, bq, 1), lambda b_, hk, ki, qi:
+                         (b_, hk, 0, qi, 0)),
+            pl.BlockSpec((1, 1, g, bq, 1), lambda b_, hk, ki, qi:
+                         (b_, hk, 0, qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, hk, ki, qi:
+                         (b_, hk, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b_, hk, ki, qi:
+                         (b_, hk, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, kp.shape[2], d), k.dtype),
+            jax.ShapeDtypeStruct((b, hkv, kp.shape[2], d), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bkv, d), jnp.float32),
+                        pltpu.VMEM((bkv, d), jnp.float32)],
+        interpret=interpret,
+    )(qg, kp, vp, dog, lseg, dltg)
+    dk = dk.transpose(0, 2, 1, 3)[:, :skv]
+    dv = dv.transpose(0, 2, 1, 3)[:, :skv]
+    return dq, dk, dv
+
+
+# in-kernel q/do blocks for the dkv pass carry all g heads: the
+# BlockSpec above loads (g, bq, d); kernel indexes q_ref[0, j]

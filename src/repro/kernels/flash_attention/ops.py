@@ -1,0 +1,35 @@
+"""jit'd wrapper: Pallas flash attention with custom VJP."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_bwd, flash_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fa(q, k, v, causal, scale, q_offset, interpret):
+    out, _ = flash_fwd(q, k, v, causal=causal, scale=scale,
+                       q_offset=q_offset, interpret=interpret)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, scale, q_offset, interpret):
+    out, lse = flash_fwd(q, k, v, causal=causal, scale=scale,
+                         q_offset=q_offset, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, scale, q_offset, interpret, res, dout):
+    q, k, v, out, lse = res
+    return flash_bwd(q, k, v, out, lse, dout, causal=causal, scale=scale,
+                     q_offset=q_offset, interpret=interpret)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, q_offset=0,
+                    interpret=False):
+    return _fa(q, k, v, causal, scale, q_offset, interpret)

@@ -1,0 +1,193 @@
+"""Pure-jnp oracles for blockwise (flash) attention.
+
+``naive`` is the O(S^2)-memory oracle used by tests.  ``chunked`` is the
+memory-bounded lax.scan formulation (running max / normalizer) with a
+flash-style custom VJP: the backward pass RECOMPUTES per-block
+probabilities from the saved logsumexp instead of letting JAX save the
+O(S^2) score matrix through the scan — without this, a 4k-train dry-run
+shows ~40 GiB/device of autodiff residuals.  This is the same math the
+Pallas kernels implement, so non-TPU backends lower the same algorithm.
+
+Shapes: q (B, Sq, H, D); k, v (B, Skv, Hkv, D) with H = Hkv * G (GQA).
+Matmuls run in the input dtype with fp32 accumulation
+(preferred_element_type), matching MXU semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+
+NEG_INF = -1e30
+F32 = jnp.float32
+
+
+def _gqa_split(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def naive(q, k, v, *, causal=True, scale=None, q_offset=0):
+    """Materializes the full score matrix. Oracle only."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    scale = scale or d ** -0.5
+    qg = _gqa_split(q, hkv)                       # b sq hkv g d
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(F32),
+                        k.astype(F32)) * scale
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(F32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash forward/backward over KV blocks
+# ---------------------------------------------------------------------------
+
+
+def _blocks(x, nb, bs):
+    b, s, h, d = x.shape
+    return x.reshape(b, nb, bs, h, d).transpose(1, 0, 2, 3, 4)
+
+
+def _mask(i, bs, skv, sq, causal, q_offset):
+    kpos = i * bs + jnp.arange(bs)
+    valid = kpos[None, :] < skv
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        valid = valid & (kpos[None, :] <= qpos[:, None])
+    return valid          # (sq, bs)
+
+
+def _fwd(q, k, v, causal, scale, block_kv, q_offset):
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale or d ** -0.5
+    bs = min(flags.inner_blocks(skv, block_kv), skv)
+    pad = (-skv) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (skv + pad) // bs
+    kb, vb = _blocks(k, nb, bs), _blocks(v, nb, bs)
+    qg = _gqa_split(q, hkv)
+
+    m0 = jnp.full((b, sq, hkv, g), NEG_INF, F32)
+    l0 = jnp.zeros((b, sq, hkv, g), F32)
+    a0 = jnp.zeros((b, sq, hkv, g, d), F32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, i = inp
+        logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kblk,
+                            preferred_element_type=F32) * scale
+        valid = _mask(i, bs, skv, sq, causal, q_offset)
+        logits = jnp.where(valid[None, :, None, None, :], logits, NEG_INF)
+        mb = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - mb[..., None])
+        alpha = jnp.exp(m - mb)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=F32)
+        return (mb, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)),
+                                  unroll=flags.scan_unroll())
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).reshape(b, sq, h, d).astype(q.dtype)
+    lse = m + jnp.log(l)                                  # b sq hkv g
+    return out, lse
+
+
+def _bwd_impl(q, k, v, out, lse, dout, causal, scale, block_kv, q_offset):
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale_v = scale or d ** -0.5
+    bs = min(flags.inner_blocks(skv, block_kv), skv)
+    pad = (-skv) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (skv + pad) // bs
+    kb, vb = _blocks(k, nb, bs), _blocks(v, nb, bs)
+    qg = _gqa_split(q, hkv)
+    og = _gqa_split(out, hkv).astype(F32)
+    dog = _gqa_split(dout, hkv).astype(F32)
+    delta = (og * dog).sum(-1)                            # b sq hkv g
+
+    dq0 = jnp.zeros((b, sq, hkv, g, d), F32)
+
+    def body(dq, inp):
+        kblk, vblk, i = inp
+        logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kblk,
+                            preferred_element_type=F32) * scale_v
+        valid = _mask(i, bs, skv, sq, causal, q_offset)
+        logits = jnp.where(valid[None, :, None, None, :], logits, NEG_INF)
+        p = jnp.exp(logits - lse[..., None])              # b sq hkv g k
+        dv = jnp.einsum("bqhgk,bqhgd->bkhd", p.astype(dout.dtype), dog,
+                        preferred_element_type=F32)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dog.astype(vblk.dtype), vblk,
+                        preferred_element_type=F32)
+        ds = p * (dp - delta[..., None]) * scale_v
+        dq = dq + jnp.einsum("bqhgk,bkhd->bqhgd", ds.astype(kblk.dtype),
+                             kblk, preferred_element_type=F32)
+        dk = jnp.einsum("bqhgk,bqhgd->bkhd", ds.astype(qg.dtype), qg,
+                        preferred_element_type=F32)
+        return dq, (dk, dv)
+
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nb)),
+                                  unroll=flags.scan_unroll())
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, nb * bs, hkv, d)[:, :skv]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, nb * bs, hkv, d)[:, :skv]
+    return (dq.reshape(b, sq, h, d).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, scale, block_kv, q_offset):
+    return _fwd(q, k, v, causal, scale, block_kv, q_offset)[0]
+
+
+def _flash_fwd(q, k, v, causal, scale, block_kv, q_offset):
+    out, lse = _fwd(q, k, v, causal, scale, block_kv, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, scale, block_kv, q_offset, res, dout):
+    q, k, v, out, lse = res
+    return _bwd_impl(q, k, v, out, lse, dout, causal, scale, block_kv,
+                     q_offset)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked(q, k, v, *, causal=True, scale=None, block_kv=1024, q_offset=0):
+    """Flash-style streaming attention (differentiable, O(S*block) memory).
+
+    GQA is handled by repeating KV heads up front: the fused (hkv, g)
+    head split leaves score blocks unshardable under SPMD whenever
+    neither factor divides the model axis (e.g. kv=4, g=8 on a 16-way
+    axis), which replicates O(S*block) fp32 buffers on every device.
+    After repetition scores are (B, S, H, block) and shard over H.  The
+    repeat is O(S*H*D) bytes — noise next to the score matmuls — and
+    autodiff sums dk/dv back over the groups.  The Pallas TPU kernel
+    handles GQA natively instead (one KV block serves g query heads).
+    """
+    g = q.shape[2] // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return _flash(q, k, v, causal, scale, block_kv, q_offset)

@@ -1,0 +1,8 @@
+"""jit'd wrapper for the grouped expert GEMM."""
+from __future__ import annotations
+
+from repro.kernels.moe_gemm.kernel import moe_gemm_kernel
+
+
+def moe_gemm(x, w, *, interpret=False):
+    return moe_gemm_kernel(x, w, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the grouped expert GEMM.
+
+x: (E, T, D) capacity-packed expert inputs; w: (E, D, F).
+out[e] = x[e] @ w[e].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w):
+    return jnp.einsum("etd,edf->etf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,48 @@
+"""Backend-dispatching facade over the kernel library.
+
+Models call these; on TPU they route to the Pallas kernels, elsewhere
+(CPU dry-run / smoke tests) to the mathematically-identical jnp
+references, so one model definition serves both.  ``impl`` overrides:
+"pallas" | "interpret" | "ref" | None (auto).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import ref as _dec_ref
+from repro.kernels.flash_attention import ref as _fa_ref
+from repro.kernels.rmsnorm import ref as _rn_ref
+
+
+def _auto() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, q_offset=0,
+                    block_kv=1024, impl=None):
+    impl = impl or _auto()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.flash_attention import ops as _fa_ops
+        return _fa_ops.flash_attention(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            interpret=(impl == "interpret"))
+    return _fa_ref.chunked(q, k, v, causal=causal, scale=scale,
+                           block_kv=block_kv, q_offset=q_offset)
+
+
+def decode_attention(q, k, v, cache_len, *, scale=None, impl=None):
+    impl = impl or _auto()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.decode_attention import ops as _dec_ops
+        return _dec_ops.decode_attention(
+            q, k, v, cache_len, scale=scale, interpret=(impl == "interpret"))
+    return _dec_ref.decode_ref(q, k, v, cache_len, scale=scale)
+
+
+def rmsnorm(x, weight, *, eps=1e-5, impl=None):
+    impl = impl or _auto()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.rmsnorm import ops as _rn_ops
+        return _rn_ops.rmsnorm(x, weight, eps=eps,
+                               interpret=(impl == "interpret"))
+    return _rn_ref.rmsnorm_ref(x, weight, eps=eps)

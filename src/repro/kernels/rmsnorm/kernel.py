@@ -1,0 +1,48 @@
+"""Pallas TPU fused RMSNorm (row-blocked).
+
+Grid over row blocks; each block loads (rows, d) into VMEM, reduces the
+mean-square in fp32 on the VPU and applies the scale in one pass —
+one HBM read + one write per element (XLA's unfused chain reads x
+three times: square-mean, normalize, scale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 256
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_kernel(x, w, *, eps=1e-5, interpret=False):
+    """x: (..., d); w: (d,)."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    blk = min(ROW_BLOCK, rows)
+    pad = (-rows) % blk
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(x2.shape[0] // blk,),
+        in_specs=[pl.BlockSpec((blk, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,8 @@
+"""jit'd wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+
+
+def rmsnorm(x, weight, *, eps=1e-5, interpret=False):
+    return rmsnorm_kernel(x, weight, eps=eps, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, weight, *, eps=1e-5):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (1.0 / jnp.sqrt(var + eps))
+    return (y * weight.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,85 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+Older sweep JSONs stored raw (f32-promoted) byte counts; terms here are
+recomputed with the bf16 adjustment so every cell is on the same basis.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+          "all-to-all": 1.0, "collective-permute": 1.0}
+SCALE = 0.5      # XLA:CPU bf16->f32 promotion correction
+
+
+def recompute(d):
+    r = d["roofline"]
+    flops = r["hlo_flops_per_device"]
+    raw_bytes = r.get("hlo_bytes_raw_f32promoted",
+                      r["hlo_bytes_per_device"])
+    coll_w = sum(v["bytes"] * WEIGHT.get(k, 1.0)
+                 for k, v in d["collectives"].items())
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = raw_bytes * SCALE / HBM_BW
+    t_x = coll_w * SCALE / ICI_BW
+    bound = max(t_c, t_m, t_x)
+    dom = {t_c: "compute", t_m: "memory", t_x: "collective"}[bound]
+    mf = r["model_flops_per_device"]
+    frac = min((mf / PEAK_FLOPS_BF16) / max(bound, 1e-12), 1.0)
+    mem = r["memory_per_device_bytes"]["total_live"]
+    return {"t_compute": t_c, "t_memory": t_m, "t_coll": t_x,
+            "dominant": dom, "frac": frac,
+            "mem_raw_gib": mem / 2**30,
+            "mem_bf16_gib": mem * 0.55 / 2**30,   # mixed f32 states
+            "useful": r["useful_flops_ratio"],
+            "model_flops": mf, "hlo_flops": flops}
+
+
+def rows(dirname="experiments/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        d = json.load(open(f))
+        row = {"arch": d.get("arch"), "shape": d.get("shape"),
+               "mesh": d.get("mesh"), "strategy": d.get("strategy"),
+               "file": os.path.basename(f)}
+        if d.get("skipped"):
+            row["skipped"] = d["skipped"]
+        elif "roofline" in d:
+            row.update(recompute(d))
+        out.append(row)
+    return out
+
+
+def markdown_table(rs, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | dom | frac | t_cmp s | t_mem s | "
+             "t_coll s | mem GiB (raw/adj) | useful |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rs:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                f"skipped: sub-quadratic-only shape |")
+            continue
+        if "frac" not in r:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant']} | "
+            f"{r['frac']:.3f} | {r['t_compute']:.2f} | "
+            f"{r['t_memory']:.2f} | {r['t_coll']:.2f} | "
+            f"{r['mem_raw_gib']:.1f}/{r['mem_bf16_gib']:.1f} | "
+            f"{r['useful']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rs = rows()
+    for mesh in ("16x16", "2x16x16"):
+        sel = [r for r in rs if r.get("mesh") == mesh
+               and r.get("strategy") == "optimized"]
+        print(markdown_table(sel, f"{mesh} optimized"))
+        print()

@@ -1,0 +1,138 @@
+"""Roofline term extraction from a compiled dry-run artifact.
+
+compute  = HLO_FLOPs / (chips * peak)      [cost_analysis is per-device,
+memory   = HLO_bytes / (chips * HBM_bw)     so terms divide by one chip]
+collect. = collective_bytes / link_bw
+
+collective_bytes is parsed from the optimized HLO text: result-shape
+bytes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops (per-device shapes post-SPMD), weighted by the
+op's ring cost (all-reduce moves ~2x its payload).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[^\]]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# per-device traffic multiplier relative to result bytes (ring algorithms)
+_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    by_op: Dict[str, Dict] = {}
+    total, weighted = 0, 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2)
+        op = m.group(3)
+        b = _shape_bytes(shape_str)
+        d = by_op.setdefault(op, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+        total += b
+        weighted += b * _WEIGHT[op]
+    return {"by_op": by_op, "bytes": total, "weighted_bytes": weighted}
+
+
+# XLA:CPU has no native bf16: the cpu-float-support pass promotes bf16
+# tensors (and their collectives) to f32, so byte counts measured on
+# this host are ~2x the TPU production numbers for bf16-dominated
+# programs.  All cells run bf16 activations/params, so roofline terms
+# use adjusted bytes (x0.5); raw values are retained alongside.
+BF16_PROMOTION_SCALE = 0.5
+
+
+def roofline(cost: Dict, mem, coll: Dict, *, model_flops_per_device: float,
+             n_devices: int) -> Dict:
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes_raw = float(cost.get("bytes accessed", 0.0))
+    hlo_bytes = hlo_bytes_raw * BF16_PROMOTION_SCALE
+    t_compute = hlo_flops / PEAK_FLOPS_BF16
+    t_memory = hlo_bytes / HBM_BW
+    t_coll = coll["weighted_bytes"] * BF16_PROMOTION_SCALE / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    useful = model_flops_per_device / max(hlo_flops, 1.0)
+    # roofline fraction: time the "useful" math would take at peak over
+    # the modeled bound (max of the three terms)
+    frac = (model_flops_per_device / PEAK_FLOPS_BF16) / max(total, 1e-12)
+    return {
+        "hlo_flops_per_device": hlo_flops,
+        "hlo_bytes_per_device": hlo_bytes,
+        "hlo_bytes_raw_f32promoted": hlo_bytes_raw,
+        "collective_bytes_per_device": coll["bytes"]
+        * BF16_PROMOTION_SCALE,
+        "collective_bytes_raw_f32promoted": coll["bytes"],
+        "collective_weighted_bytes": coll["weighted_bytes"]
+        * BF16_PROMOTION_SCALE,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": model_flops_per_device,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "memory_per_device_bytes": {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "alias": mem.alias_size_in_bytes,
+            "total_live": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes,
+        },
+    }
+
+
+def analytic_model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode) + attention terms.
+
+    Global FLOPs across all devices; causal attention counted at S^2/2.
+    """
+    from repro.models.model import Model
+    n_active = Model(cfg).n_active_params()
+    b, s = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for k in cfg.block_pattern if k == "attn") \
+        * cfg.n_repeats + cfg.encoder_layers * 2
+    hd, h = cfg.head_dim, cfg.n_heads
+    if shape.kind == "train":
+        tokens = b * s
+        attn = 3 * 2 * b * s * s * h * hd * n_attn   # fwd+bwd, causal/2
+        return 6.0 * n_active * tokens + attn
+    if shape.kind == "prefill":
+        tokens = b * s
+        attn = 2 * b * s * s * h * hd * n_attn // 2
+        return 2.0 * n_active * tokens + attn
+    # decode: one token; attention reads the full cache
+    attn = 4 * b * s * h * hd * n_attn
+    return 2.0 * n_active * b + attn

@@ -1,0 +1,95 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) cell as a subprocess.
+
+Each cell runs in a fresh process (jax device-count lock + compile-cache
+isolation); results land in experiments/dryrun/*.json and existing files
+are skipped, so the sweep is resumable.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--meshes 16x16 2x16x16]
+      [--strategies optimized] [--archs ...] [--shapes ...]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import SHAPES, registry, shape_applicable
+
+OUT_DIR = "experiments/dryrun"
+
+# cheap-first ordering keeps results flowing early
+ARCH_ORDER = [
+    "whisper-base", "granite-moe-1b-a400m", "xlstm-1.3b", "chatglm3-6b",
+    "yi-6b", "jamba-v0.1-52b", "pixtral-12b", "qwen2-72b", "deepseek-67b",
+    "arctic-480b",
+]
+SHAPE_ORDER = ["decode_32k", "long_500k", "train_4k", "prefill_32k"]
+
+
+def cell_path(arch, shape, mesh, strategy):
+    return os.path.join(OUT_DIR,
+                        f"{arch}__{shape}__{mesh}__{strategy}.json")
+
+
+def run_sweep(archs, shapes, meshes, strategies, timeout=2400):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cells = [(a, s, m, st) for m in meshes for st in strategies
+             for a in archs for s in shapes]
+    done = failed = skipped = 0
+    for arch, shape, mesh, strategy in cells:
+        out = cell_path(arch, shape, mesh, strategy)
+        if os.path.exists(out):
+            done += 1
+            continue
+        cfg = registry.get(arch)
+        ok, why = shape_applicable(cfg, SHAPES[shape])
+        if not ok:
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "strategy": strategy, "ok": True,
+                           "skipped": why}, f, indent=1)
+            skipped += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape,
+               "--strategy", strategy, "--out", out]
+        if mesh == "2x16x16":
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[sweep] {arch} {shape} {mesh} {strategy} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=timeout)
+        except subprocess.TimeoutExpired:
+            r = None
+        if r is None or r.returncode != 0:
+            failed += 1
+            err = (r.stderr[-2000:] if r else "TIMEOUT")
+            with open(out + ".err", "w") as f:
+                f.write(err)
+            print(f"[sweep]   FAILED ({time.time()-t0:.0f}s): "
+                  f"{err.splitlines()[-1] if err.splitlines() else err}",
+                  flush=True)
+        else:
+            done += 1
+            print(f"[sweep]   ok ({time.time()-t0:.0f}s)", flush=True)
+    print(f"[sweep] complete: {done} ok, {skipped} n/a, {failed} failed",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=ARCH_ORDER)
+    ap.add_argument("--shapes", nargs="*", default=SHAPE_ORDER)
+    ap.add_argument("--meshes", nargs="*", default=["16x16", "2x16x16"])
+    ap.add_argument("--strategies", nargs="*", default=["optimized"])
+    args = ap.parse_args()
+    run_sweep(args.archs, args.shapes, args.meshes, args.strategies)
+
+
+if __name__ == "__main__":
+    main()

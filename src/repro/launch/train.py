@@ -1,0 +1,62 @@
+"""Training launcher.
+
+Smoke scale (this host):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 20 --batch 8 --seq 64
+
+Production scale: the same entry point with --production lowers the
+full config against the 16x16 production mesh (requires 256 devices —
+on real hardware the jax distributed runtime provides them; here the
+dry-run path in launch/dryrun.py is the no-hardware proof).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import BASELINE, OPTIMIZED, SHAPES, TrainConfig, registry
+from repro.configs.base import WorkloadShape
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS
+                    + registry.EXTRA_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--production", action="store_true",
+                    help="full config on the 16x16 production mesh")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--strategy", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    strategy = OPTIMIZED if args.strategy == "optimized" else BASELINE
+    if args.production:
+        cfg = registry.get(args.arch)
+        shape = SHAPES["train_4k"]
+        mesh = make_production_mesh()
+    else:
+        cfg = registry.smoke(args.arch)
+        shape = WorkloadShape("smoke", "train", args.seq, args.batch)
+        mesh = make_local_mesh(1, 1)
+
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1))
+    tr = Trainer(cfg, tcfg, shape, mesh, strategy=strategy,
+                 ckpt_dir=args.ckpt_dir)
+    hist = tr.run(args.steps, ckpt_every=args.ckpt_every, log_every=5)
+    print(f"final loss: {hist[-1]['loss']:.4f} "
+          f"(first {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Model façade: schema, init, train loss, prefill, decode.
+
+All entry points are pure functions over explicit param/cache pytrees so
+they pjit cleanly; ``Model`` only holds the config.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, WorkloadShape
+from repro.models import layers, transformer
+from repro.models import params as P
+
+VISION_PATCHES = 64          # pixtral stub: patches replacing leading tokens
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- schema
+    def param_defs(self):
+        cfg = self.cfg
+        defs = {"embed": layers.embed_defs(cfg),
+                "blocks": transformer.stack_defs(
+                    cfg, cross=bool(cfg.encoder_layers))}
+        if cfg.encoder_layers:
+            defs["encoder"] = transformer.encoder_defs(cfg)
+        return defs
+
+    def init(self, key, dtype=jnp.float32):
+        return P.init_params(self.param_defs(), key, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return P.abstract_params(self.param_defs(), dtype)
+
+    def n_params(self) -> int:
+        return P.count_params(self.param_defs())
+
+    def n_active_params(self) -> int:
+        cfg = self.cfg
+        total = self.n_params()
+        if cfg.moe is None:
+            return total
+        mc = cfg.moe
+        per_expert = mc.d_ff_expert * cfg.d_model * (
+            3 if cfg.mlp_type == "swiglu" else 2)
+        n_moe = sum(1 for i in range(cfg.n_layers)
+                    if transformer._pos_is_moe(cfg, i % cfg.pattern_len))
+        return total - (mc.n_experts - mc.top_k) * per_expert * n_moe
+
+    # ------------------------------------------------------------- caches
+    def cache_defs(self, batch: int, seq_len: int):
+        enc_len = seq_len // max(self.cfg.encoder_seq_divisor, 1) \
+            if self.cfg.encoder_layers else 0
+        return transformer.cache_defs(self.cfg, batch, seq_len, enc_len)
+
+    def init_cache(self, batch: int, seq_len: int):
+        leaves = self.cache_defs(batch, seq_len)
+        return P.tree_map(
+            lambda d: jnp.zeros(d.shape, d.resolve_dtype(jnp.bfloat16)),
+            leaves)
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return P.abstract_params(self.cache_defs(batch, seq_len),
+                                 jnp.bfloat16)
+
+    # ------------------------------------------------------------ forward
+    def _trunk(self, params, tokens, *, mode, caches=None, cache_index=None,
+               frames=None, patches=None, remat=True,
+               compute_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        s = tokens.shape[1]
+        offset = cache_index if mode == "decode" else 0
+        x = layers.embed_apply(cfg, params["embed"], tokens, compute_dtype,
+                               offset=offset)
+        if cfg.frontend == "vision" and patches is not None:
+            x = jax.lax.dynamic_update_slice(
+                x, patches.astype(compute_dtype), (0, 0, 0))
+        enc_out = None
+        if cfg.encoder_layers and mode != "decode":
+            assert frames is not None, "enc-dec arch needs 'frames' input"
+            enc_out = transformer.encoder_apply(
+                cfg, params["encoder"], frames.astype(compute_dtype),
+                remat=remat, mode=mode)
+        if mode == "decode":
+            positions = jnp.arange(s) + cache_index
+        else:
+            positions = jnp.arange(s)
+        x, new_caches, aux = transformer.stack_apply(
+            cfg, params["blocks"], x, positions=positions, caches=caches,
+            cache_index=cache_index, enc_out=enc_out, mode=mode, remat=remat)
+        logits = layers.logits_apply(cfg, params["embed"], x)
+        return logits, new_caches, aux
+
+    # -------------------------------------------------------------- train
+    def loss(self, params, batch: Dict, *, remat=True,
+             compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Dict]:
+        logits, _, aux = self._trunk(
+            params, batch["tokens"], mode="train",
+            frames=batch.get("frames"), patches=batch.get("patches"),
+            remat=remat, compute_dtype=compute_dtype)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction: stays local under a vocab-sharded head
+        onehot = jax.nn.one_hot(batch["labels"], self.cfg.vocab_size,
+                                dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        xent = (lse - gold).mean()
+        loss = xent + aux
+        return loss, {"loss": loss, "xent": xent, "moe_aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params, batch: Dict, *,
+                compute_dtype=jnp.bfloat16):
+        """Build the KV/state cache for a prompt; returns (last_logits, cache)."""
+        seq_len = batch["tokens"].shape[1]
+        caches = self.init_cache(batch["tokens"].shape[0], seq_len)
+        logits, new_caches, _ = self._trunk(
+            params, batch["tokens"], mode="prefill", caches=caches,
+            cache_index=jnp.int32(0), frames=batch.get("frames"),
+            patches=batch.get("patches"), remat=False,
+            compute_dtype=compute_dtype)
+        return logits[:, -1], new_caches
+
+    def decode_step(self, params, caches, tokens, cache_index, *,
+                    compute_dtype=jnp.bfloat16):
+        """One token step. tokens: (B, 1); cache_index: scalar position."""
+        logits, new_caches, _ = self._trunk(
+            params, tokens, mode="decode", caches=caches,
+            cache_index=cache_index, remat=False,
+            compute_dtype=compute_dtype)
+        return logits[:, -1], new_caches
+
+
+# --------------------------------------------------------------------------
+# Input specs per workload shape (ShapeDtypeStruct stand-ins; shardable)
+# --------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: WorkloadShape) -> Dict:
+    """Abstract model inputs for one (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        spec = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    elif shape.kind == "prefill":
+        spec = {"tokens": sds((b, s), i32)}
+    else:  # decode
+        spec = {"tokens": sds((b, 1), i32)}
+    if cfg.encoder_layers and shape.kind != "decode":
+        enc_len = s // max(cfg.encoder_seq_divisor, 1)
+        spec["frames"] = sds((b, enc_len, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        n_patch = min(VISION_PATCHES, s // 2)
+        spec["patches"] = sds((b, n_patch, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+def example_batch(cfg: ModelConfig, shape: WorkloadShape, key=None):
+    """Concrete small-batch realization of input_specs (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, s.dtype) * 0.02
+    return out

@@ -1,0 +1,125 @@
+"""Mixture-of-experts FFN: token-choice top-k routing, capacity dispatch.
+
+Dispatch/combine are GATHER-based (argsort-free slot assignment via
+cumsum + scatter), not the dense one-hot einsum: the einsum formulation
+inflates FLOPs by O(E*c/D') and would poison the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio.  With experts sharded over the ``model``
+axis (expert parallelism) the cross-shard gathers lower to
+all-to-all/all-gather collectives — the MoE analogue of the paper's
+hierarchical work distribution.
+
+Logical axes: "expert" shards over the model axis; expert-internal dims
+stay local.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.actsharding import constrain
+from repro.models.params import PDef
+
+
+def moe_defs(cfg: ModelConfig):
+    mc = cfg.moe
+    d, f, e = cfg.d_model, mc.d_ff_expert, mc.n_experts
+    defs = {
+        "router": PDef((d, e), ("embed", None)),
+        "w_in": PDef((e, d, f), ("expert", "embed", "ff")),
+        "w_out": PDef((e, f, d), ("expert", "ff", "embed")),
+    }
+    if cfg.mlp_type == "swiglu":
+        defs["w_gate"] = PDef((e, d, f), ("expert", "embed", "ff"))
+    if mc.dense_residual:
+        from repro.models.layers import mlp_defs
+        defs["dense"] = mlp_defs(cfg, mc.d_ff_dense)
+    return defs
+
+
+def _capacity(m_tokens: int, mc) -> int:
+    c = int(-(-m_tokens * mc.top_k * mc.capacity_factor // mc.n_experts))
+    return max(c, 1)
+
+
+def moe_apply(cfg: ModelConfig, p, x) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (out, aux_metrics). Groups = batch rows."""
+    mc = cfg.moe
+    g, m, d = x.shape                       # groups, tokens-per-group, dim
+    e, k = mc.n_experts, mc.top_k
+    c = _capacity(m, mc)
+
+    # ---- router (fp32 for stability) ----
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # g m e
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # g m k
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- slot assignment: position of each (token, choice) in its expert ----
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)    # g m k e
+    flat = onehot.reshape(g, m * k, e)                         # priority: token order, then choice
+    pos = jnp.cumsum(flat, axis=1) - flat                      # g mk e
+    pos = (pos * flat).sum(-1).reshape(g, m, k)                # g m k
+    keep = pos < c
+    gate_vals = gate_vals * keep
+
+    # ---- dispatch: build idx[g, e, c] = source token (scatter) ----
+    tok_ids = jnp.broadcast_to(jnp.arange(m)[None, :, None], (g, m, k))
+    e_flat = expert_idx.reshape(g, m * k)
+    p_flat = jnp.where(keep, pos, c).reshape(g, m * k)         # c -> dropped
+    t_flat = tok_ids.reshape(g, m * k)
+    src = jnp.zeros((g, e, c), jnp.int32)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None], (g, m * k))
+    src = src.at[gi, e_flat, p_flat].set(t_flat, mode="drop")
+    slot_used = jnp.zeros((g, e, c), jnp.bool_).at[
+        gi, e_flat, p_flat].set(True, mode="drop")
+
+    # gather expert inputs: (g, e, c, d) -> (e, g, c, d)
+    xin = jnp.take_along_axis(
+        x, src.reshape(g, e * c)[..., None], axis=1)
+    xin = constrain(xin, "act_batch", None, None)
+    xin = xin.reshape(g, e, c, d).transpose(1, 0, 2, 3)
+    xin = constrain(xin, "act_expert", "act_batch", None, None)
+    xin = xin * slot_used.transpose(1, 0, 2)[..., None].astype(x.dtype)
+
+    # ---- expert FFN (grouped GEMM; Pallas moe_gemm on TPU) ----
+    h = jnp.einsum("egcd,edf->egcf", xin, p["w_in"].astype(x.dtype))
+    h = constrain(h, "act_expert", "act_batch", None, None)
+    if "w_gate" in p:
+        gt = jnp.einsum("egcd,edf->egcf", xin, p["w_gate"].astype(x.dtype))
+        gt = constrain(gt, "act_expert", "act_batch", None, None)
+        h = jax.nn.silu(gt) * h
+    else:
+        h = jax.nn.gelu(h)
+    yout = jnp.einsum("egcf,efd->egcd", h, p["w_out"].astype(x.dtype))
+    yout = constrain(yout, "act_expert", "act_batch", None, None)
+
+    # ---- combine: gather each token's k slots back ----
+    y_flat = yout.transpose(1, 0, 2, 3).reshape(g, e * c, d)
+    y_flat = constrain(y_flat, "act_batch", None, None)
+    slot_of = jnp.where(keep, expert_idx * c + pos, 0)         # g m k
+    gathered = jnp.take_along_axis(
+        y_flat, slot_of.reshape(g, m * k)[..., None], axis=1)
+    gathered = constrain(gathered, "act_batch", None, None)
+    gathered = gathered.reshape(g, m, k, d)
+    out = (gathered * gate_vals[..., None].astype(x.dtype)).sum(axis=2)
+    out = constrain(out, "act_batch", None, None)
+
+    if mc.dense_residual:
+        from repro.models.layers import mlp_apply
+        out = out + mlp_apply(cfg, p["dense"], x)
+
+    # ---- aux losses (load balance + router z) ----
+    frac_tokens = onehot.astype(jnp.float32).mean(axis=(0, 1, 2)) * e
+    frac_probs = probs.mean(axis=(0, 1))
+    lb_loss = (frac_tokens * frac_probs).sum() * e / k
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {
+        "moe_aux_loss": mc.router_aux_weight * lb_loss
+                        + mc.router_z_weight * z_loss,
+        "moe_dropped_frac": 1.0 - keep.mean(),
+    }
+    return out.astype(x.dtype), aux

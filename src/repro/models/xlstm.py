@@ -1,0 +1,297 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM training/prefill runs the CHUNKWISE-PARALLEL form (intra-chunk
+quadratic with decay mask, inter-chunk recurrent carry) — the same
+schedule the Pallas kernel implements; decode is the O(1) recurrence.
+All exponents are log-space stabilized with a running max ``m`` as in
+the xLSTM paper.  sLSTM is inherently sequential (recurrent gate
+connections) and runs under lax.scan.
+
+State per mLSTM head: C (dh x dh), n (dh), m (scalar).
+State per sLSTM:      c, n, h (d_in each), m.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.dist.actsharding import constrain
+from repro.models.params import PDef
+
+NEG = -1e30
+
+
+def _xc(cfg: ModelConfig) -> XLSTMConfig:
+    return cfg.xlstm or XLSTMConfig()
+
+
+def _dims(cfg: ModelConfig):
+    xc = _xc(cfg)
+    d_in = xc.expand * cfg.d_model
+    dh = d_in // xc.n_heads
+    return xc, d_in, dh
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+
+def mlstm_defs(cfg: ModelConfig):
+    xc, d_in, dh = _dims(cfg)
+    d, h = cfg.d_model, xc.n_heads
+    return {
+        "up_proj": PDef((d, 2 * d_in), ("embed", "xl_in")),
+        "conv_w": PDef((xc.d_conv, d_in), (None, "xl_in"), init="fan_in"),
+        "conv_b": PDef((d_in,), ("xl_in",), init="zeros"),
+        # block-diagonal per-head q/k/v
+        "wq": PDef((h, dh, dh), ("xl_heads", None, None)),
+        "wk": PDef((h, dh, dh), ("xl_heads", None, None)),
+        "wv": PDef((h, dh, dh), ("xl_heads", None, None)),
+        "w_if": PDef((d_in, 2 * h), ("xl_in", None), init="zeros"),
+        "b_i": PDef((h,), (None,), init="zeros"),
+        "b_f": PDef((h,), (None,), custom="slstm_fgate_bias"),
+        "hnorm": PDef((d_in,), ("xl_in",), init="ones"),
+        "down_proj": PDef((d_in, d), ("xl_in", "embed")),
+    }
+
+
+def _conv_causal(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b, (xp[:, -(k - 1):, :] if k > 1 else None)
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, *, cache=None):
+    """x: (B,S,D). cache {"conv","C","n","m"} or None. -> (out, new_cache)."""
+    xc, d_in, dh = _dims(cfg)
+    h = xc.n_heads
+    b, s, _ = x.shape
+
+    xz = x @ p["up_proj"].astype(x.dtype)
+    xz = constrain(xz, "act_batch", None, "act_inner")
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    uc, new_conv = _conv_causal(u, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype), conv_state)
+    uc = jax.nn.silu(uc)
+
+    def heads(t):  # (B,S,d_in) -> (B,H,S,dh)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q = jnp.einsum("bhsd,hde->bhse", heads(uc), p["wq"].astype(jnp.float32))
+    k = jnp.einsum("bhsd,hde->bhse", heads(uc), p["wk"].astype(jnp.float32))
+    k = k * (dh ** -0.5)
+    v = jnp.einsum("bhsd,hde->bhse", heads(u), p["wv"].astype(jnp.float32))
+    gates = (u.astype(jnp.float32) @ p["w_if"].astype(jnp.float32))
+    gates = gates.reshape(b, s, 2, h).transpose(0, 3, 1, 2)       # B H S 2
+    ig = gates[..., 0] + p["b_i"].astype(jnp.float32)[None, :, None]
+    lf = jax.nn.log_sigmoid(
+        gates[..., 1] + p["b_f"].astype(jnp.float32)[None, :, None])
+
+    if cache is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), NEG, jnp.float32)
+    else:
+        c0 = cache["C"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+
+    if s == 1 and cache is not None:                       # decode
+        hy, (c1, n1, m1) = _mlstm_step(
+            q[:, :, 0], k[:, :, 0], v[:, :, 0], ig[:, :, 0], lf[:, :, 0],
+            (c0, n0, m0))
+        hy = hy[:, :, None]                                # B H 1 dh
+        state = (c1, n1, m1)
+    else:                                                  # chunkwise train
+        hy, state = _mlstm_chunked(cfg, q, k, v, ig, lf, (c0, n0, m0))
+
+    hy = hy.transpose(0, 2, 1, 3).reshape(b, s, d_in)
+    # per-head group norm
+    hy = hy.reshape(b, s, h, dh)
+    hy = hy * jax.lax.rsqrt(jnp.mean(hy * hy, -1, keepdims=True) + 1e-6)
+    hy = hy.reshape(b, s, d_in) * p["hnorm"].astype(jnp.float32)
+    out = (hy.astype(x.dtype) * jax.nn.silu(z)) @ p["down_proj"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        c1, n1, m1 = state
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "C": c1.astype(cache["C"].dtype),
+                     "n": n1.astype(cache["n"].dtype),
+                     "m": m1.astype(cache["m"].dtype)}
+    return out, new_cache
+
+
+def _mlstm_step(q, k, v, ig, lf, state):
+    """One recurrent step. q,k,v: (B,H,dh); ig,lf: (B,H)."""
+    c, n, m = state
+    m1 = jnp.maximum(lf + m, ig)
+    fp = jnp.exp(lf + m - m1)
+    ip = jnp.exp(ig - m1)
+    c1 = fp[..., None, None] * c + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n1 = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n1)),
+                      jnp.exp(-m1))
+    return num / den[..., None], (c1, n1, m1)
+
+
+def _mlstm_chunked(cfg, q, k, v, ig, lf, state0):
+    """Chunkwise-parallel mLSTM. q,k,v: (B,H,S,dh); ig,lf: (B,H,S)."""
+    xc, _, dh = _dims(cfg)
+    b, h, s, _ = q.shape
+    ch = min(flags.inner_blocks(s, xc.chunk_size), s)
+    pad = (-s) % ch
+    if pad:
+        zpad = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        ig = jnp.pad(ig, ((0, 0), (0, 0), (0, pad)), constant_values=NEG)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+    nc = (s + pad) // ch
+
+    def split(t, extra=()):
+        return t.reshape((b, h, nc, ch) + extra).transpose(
+            (2, 0, 1, 3) + tuple(4 + i for i in range(len(extra))))
+
+    qs, ks, vs = (split(t, (dh,)) for t in (q, k, v))
+    igs, lfs = split(ig), split(lf)
+
+    def chunk(carry, inp):
+        c, n, m = carry                               # (B,H,dh,dh) (B,H,dh) (B,H)
+        qc, kc, vc, igc, lfc = inp                    # (B,H,ch,dh) ...
+        bcum = jnp.cumsum(lfc, axis=-1)               # B H ch
+        gl = jax.lax.cummax(igc - bcum, axis=igc.ndim - 1)
+        mloc = bcum + jnp.maximum(m[..., None], gl)   # B H ch
+        # intra-chunk decay matrix D[t, j] for j <= t
+        dlog = (bcum[..., :, None] - bcum[..., None, :]
+                + igc[..., None, :] - mloc[..., :, None])
+        tri = jnp.tril(jnp.ones((ch, ch), bool))
+        dmat = jnp.where(tri, jnp.exp(dlog), 0.0)     # B H ch ch
+        scores = jnp.einsum("bhtd,bhjd->bhtj", qc, kc) * dmat
+        inter_w = jnp.exp(bcum + m[..., None] - mloc)  # B H ch
+        num = (jnp.einsum("bhtj,bhjd->bhtd", scores, vc)
+               + inter_w[..., None] * jnp.einsum("bhtd,bhde->bhte", qc, c))
+        nloc = (jnp.einsum("bhtj,bhjd->bhtd", dmat, kc)
+                + inter_w[..., None] * n[..., None, :].repeat(ch, axis=-2))
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", qc, nloc)),
+                          jnp.exp(-mloc))
+        hy = num / den[..., None]
+        # state update to end of chunk
+        total = bcum[..., -1]                          # B H
+        m1 = total + jnp.maximum(m, gl[..., -1])
+        wstate = jnp.exp(total + m - m1)               # old-state weight
+        wk = jnp.exp(total[..., None] - bcum + igc - m1[..., None])
+        c1 = (wstate[..., None, None] * c
+              + jnp.einsum("bhj,bhjd,bhje->bhde", wk, kc, vc))
+        n1 = wstate[..., None] * n + jnp.einsum("bhj,bhjd->bhd", wk, kc)
+        return (c1, n1, m1), hy
+
+    state, ys = jax.lax.scan(chunk, state0, (qs, ks, vs, igs, lfs),
+                             unroll=flags.scan_unroll())
+    ys = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * ch, dh)
+    return ys[:, :, :s], state
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int):
+    xc, d_in, dh = _dims(cfg)
+    return {"conv": (batch, xc.d_conv - 1, d_in),
+            "C": (batch, xc.n_heads, dh, dh),
+            "n": (batch, xc.n_heads, dh),
+            "m": (batch, xc.n_heads)}
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+
+def slstm_defs(cfg: ModelConfig):
+    xc, d_in, dh = _dims(cfg)
+    d, h = cfg.d_model, xc.n_heads
+    dhh = d // h
+    return {
+        "w": PDef((d, 4 * d), ("embed", "xl_in")),
+        "r": PDef((h, dhh, 4 * dhh), ("xl_heads", None, None), scale=0.005),
+        "b_i": PDef((d,), (None,), init="zeros"),
+        "b_f": PDef((d,), (None,), custom="slstm_fgate_bias"),
+        "b_z": PDef((d,), (None,), init="zeros"),
+        "b_o": PDef((d,), (None,), init="zeros"),
+        "hnorm": PDef((d,), (None,), init="ones"),
+        "up_proj": PDef((d, 2 * d_in), ("embed", "xl_in")),
+        "down_proj": PDef((d_in, d), ("xl_in", "embed")),
+    }
+
+
+def slstm_apply(cfg: ModelConfig, p, x, *, cache=None):
+    """x: (B,S,D). cache {"c","n","h","m"} each (B,D) or None."""
+    xc, d_in, _ = _dims(cfg)
+    b, s, d = x.shape
+    h = xc.n_heads
+    dhh = d // h
+
+    wx = (x.astype(jnp.float32) @ p["w"].astype(jnp.float32))  # B S 4D
+
+    if cache is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        h0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, d), NEG, jnp.float32)
+    else:
+        c0, n0, h0, m0 = (cache[k].astype(jnp.float32)
+                          for k in ("c", "n", "h", "m"))
+
+    r = p["r"].astype(jnp.float32)
+    bi = p["b_i"].astype(jnp.float32)
+    bf = p["b_f"].astype(jnp.float32)
+    bz = p["b_z"].astype(jnp.float32)
+    bo = p["b_o"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, hprev, m = carry
+        rh = jnp.einsum("bhd,hde->bhe", hprev.reshape(b, h, dhh), r)
+        pre = wx_t + rh.reshape(b, 4 * d)
+        it, ft, zt, ot = jnp.split(pre, 4, axis=-1)
+        it, ft, zt, ot = it + bi, ft + bf, zt + bz, ot + bo
+        m1 = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m1)
+        fp = jnp.exp(ft + m - m1)
+        c1 = fp * c + ip * jnp.tanh(zt)
+        n1 = fp * n + ip
+        h1 = jax.nn.sigmoid(ot) * c1 / jnp.maximum(n1, 1e-6)
+        return (c1, n1, h1, m1), h1
+
+    (c1, n1, h1, m1), hs = jax.lax.scan(
+        step, (c0, n0, h0, m0), wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                               # B S D
+    hs = hs * p["hnorm"].astype(jnp.float32)
+
+    # gated FFN (the sLSTM block's post-projection)
+    uz = hs.astype(x.dtype) @ p["up_proj"].astype(x.dtype)
+    u, z = jnp.split(uz, 2, axis=-1)
+    out = (jax.nn.silu(z) * u) @ p["down_proj"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c1.astype(cache["c"].dtype),
+                     "n": n1.astype(cache["n"].dtype),
+                     "h": h1.astype(cache["h"].dtype),
+                     "m": m1.astype(cache["m"].dtype)}
+    return out, new_cache
+
+
+def slstm_cache_shape(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": (batch, d), "n": (batch, d), "h": (batch, d),
+            "m": (batch, d)}

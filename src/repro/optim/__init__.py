@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    make_optimizer, opt_state_defs,
+)
+from repro.optim.schedules import lr_schedule  # noqa: F401

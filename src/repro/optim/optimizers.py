@@ -1,0 +1,162 @@
+"""Sharded optimizers: AdamW and (factored) Adafactor.
+
+State schemas are PDef trees derived from the model's PDef tree, so the
+dry-run can materialize optimizer states as ShapeDtypeStructs and
+``dist/sharding.py`` can shard them (ZeRO-1: states always take the
+"opt" rule table, i.e. sharded over the data axis even when params are
+replicated).
+
+Adafactor (beta1=0, factored second moment) is the production choice
+for the largest MoE (arctic-480b): AdamW fp32 states would not fit a
+single v5e pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import params as P
+from repro.models.params import PDef
+from repro.optim.schedules import lr_schedule
+
+
+# ---------------------------------------------------------------------------
+# State schemas
+# ---------------------------------------------------------------------------
+
+
+def _adamw_defs(model_defs, dtype: str):
+    zero = lambda d: dataclasses.replace(d, init="zeros", custom=None,
+                                         dtype=dtype)
+    return {"m": P.tree_map(zero, model_defs),
+            "v": P.tree_map(zero, model_defs)}
+
+
+def _adafactor_defs(model_defs, dtype: str):
+    def row(d: PDef):
+        if len(d.shape) < 2:
+            return dataclasses.replace(d, init="zeros", custom=None,
+                                       dtype=dtype)
+        return PDef(d.shape[:-1], d.axes[:-1], init="zeros", dtype=dtype)
+
+    def col(d: PDef):
+        if len(d.shape) < 2:
+            # unfactored small vectors: second moment stored directly;
+            # mark with zero-size row to keep the tree structure uniform
+            return PDef((1,), (None,), init="zeros", dtype=dtype)
+        return PDef(d.shape[:-2] + d.shape[-1:], d.axes[:-2] + d.axes[-1:],
+                    init="zeros", dtype=dtype)
+
+    return {"vr": P.tree_map(row, model_defs),
+            "vc": P.tree_map(col, model_defs)}
+
+
+def opt_state_defs(cfg: ModelConfig, model_defs):
+    dtype = cfg.opt_state_dtype
+    if cfg.optimizer == "adafactor":
+        return _adafactor_defs(model_defs, dtype)
+    return _adamw_defs(model_defs, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Updates
+# ---------------------------------------------------------------------------
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def make_optimizer(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns update(grads, opt_state, params, step) -> (new_p, new_s, stats)."""
+
+    def lr_at(step):
+        return lr_schedule(step, base_lr=tcfg.learning_rate,
+                           warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.total_steps)
+
+    def clip(grads):
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9))
+        return jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+    if cfg.optimizer == "adafactor":
+        def update(grads, state, params, step):
+            grads, gnorm = clip(grads)
+            lr = lr_at(step)
+            d = 1e-30
+            new_vr, new_vc, new_p = {}, {}, {}
+
+            def upd(g, vr, vc, p):
+                g2 = g * g + d
+                if g.ndim >= 2:
+                    vr1 = 0.999 * vr.astype(jnp.float32) + 0.001 * g2.mean(-1)
+                    vc1 = 0.999 * vc.astype(jnp.float32) + 0.001 * g2.mean(-2)
+                    denom = (vr1[..., None] / (vr1.mean(-1, keepdims=True)
+                                               [..., None] + d)) * vc1[..., None, :]
+                    u = g * jax.lax.rsqrt(denom + d)
+                else:
+                    vr1 = 0.999 * vr.astype(jnp.float32) + 0.001 * g2
+                    vc1 = vc.astype(jnp.float32)
+                    u = g * jax.lax.rsqrt(vr1 + d)
+                # relative step clip
+                u = u / jnp.maximum(1.0, _rms(u))
+                p32 = p.astype(jnp.float32)
+                p1 = p32 - lr * u - lr * tcfg.weight_decay * p32
+                return vr1.astype(vr.dtype), vc1.astype(vc.dtype), \
+                    p1.astype(p.dtype)
+
+            flat_g, tdef = jax.tree_util.tree_flatten(grads)
+            flat_vr = tdef.flatten_up_to(state["vr"])
+            flat_vc = tdef.flatten_up_to(state["vc"])
+            flat_p = tdef.flatten_up_to(params)
+            out = [upd(g, vr, vc, p) for g, vr, vc, p
+                   in zip(flat_g, flat_vr, flat_vc, flat_p)]
+            new_state = {
+                "vr": jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
+                "vc": jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+            }
+            new_params = jax.tree_util.tree_unflatten(
+                tdef, [o[2] for o in out])
+            return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+        return update
+
+    def update(grads, state, params, step):  # AdamW
+        grads, gnorm = clip(grads)
+        lr = lr_at(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1 - tcfg.b1 ** t
+        bc2 = 1 - tcfg.b2 ** t
+
+        def upd(g, m, v, p):
+            m1 = tcfg.b1 * m.astype(jnp.float32) + (1 - tcfg.b1) * g
+            v1 = tcfg.b2 * v.astype(jnp.float32) + (1 - tcfg.b2) * g * g
+            u = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + 1e-8)
+            p32 = p.astype(jnp.float32)
+            p1 = p32 - lr * (u + tcfg.weight_decay * p32)
+            return m1.astype(m.dtype), v1.astype(v.dtype), p1.astype(p.dtype)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_state = {
+            "m": jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
+            "v": jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+        }
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+    return update
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)

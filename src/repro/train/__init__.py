@@ -1,0 +1,1 @@
+from repro.train.trainer import Trainer  # noqa: F401

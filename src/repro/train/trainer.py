@@ -1,0 +1,104 @@
+"""Training driver: data pipeline + pjit step + checkpoint/restart.
+
+This is the "application container" a MiniCluster job runs.  It is
+deliberately mesh-agnostic: the same Trainer runs a reduced config on
+this host's devices (smoke tests, examples) and the full config on a
+production mesh (the launcher passes the mesh + shardings in).  Elastic
+restart = construct a Trainer on the new mesh and ``resume()`` — the
+checkpoint manager reshards onto the new layout.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs.base import (BASELINE, ModelConfig, ShardingStrategy,
+                                TrainConfig, WorkloadShape)
+from repro.data import DataPipeline
+from repro.dist import steps as dsteps
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 shape: WorkloadShape, mesh, *,
+                 strategy: ShardingStrategy = BASELINE,
+                 ckpt_dir: Optional[str] = None, seed: int = 0):
+        self.cfg, self.tcfg, self.shape, self.mesh = cfg, tcfg, shape, mesh
+        self.strategy = strategy
+        self.seed = seed
+        step_fn, sshard, bshard = dsteps.build_train_step(
+            cfg, tcfg, strategy, mesh, shape)
+        import repro.dist.sharding as shd
+        self._jit_step = jax.jit(
+            step_fn, in_shardings=(sshard, bshard),
+            out_shardings=(sshard, shd.replicated(mesh)),
+            donate_argnums=(0,))
+        self.state_shardings = sshard
+        self.batch_shardings = bshard
+        self.ckpt = (CheckpointManager(ckpt_dir) if ckpt_dir else None)
+        self.state = None
+        self.start_step = 0
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def init_or_resume(self):
+        if self.ckpt is not None:
+            template = dsteps.abstract_train_state(self.cfg, self.tcfg)
+            restored, step = self.ckpt.restore_latest(
+                template, self.state_shardings)
+            if restored is not None:
+                self.state = restored
+                self.start_step = int(step)
+                return "resumed"
+        with self.mesh:
+            state = dsteps.init_train_state(
+                self.cfg, self.tcfg, jax.random.PRNGKey(self.seed))
+            self.state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), state,
+                self.state_shardings)
+        return "initialized"
+
+    def _put_batch(self, batch):
+        out = {}
+        for k, v in batch.items():
+            if k.startswith("_"):
+                continue
+            out[k] = jax.device_put(v, self.batch_shardings[k])
+        return out
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, *, ckpt_every: int = 0,
+            log_every: int = 10) -> List[Dict]:
+        if self.state is None:
+            self.init_or_resume()
+        pipe = DataPipeline(self.cfg, self.shape, seed=self.seed,
+                            start_step=self.start_step)
+        try:
+            for i in range(self.start_step, self.start_step + n_steps):
+                batch = self._put_batch(next(pipe))
+                t0 = time.perf_counter()
+                self.state, metrics = self._jit_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                rec = {"step": i,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "step_time_s": dt}
+                self.history.append(rec)
+                if log_every and (i % log_every == 0):
+                    print(f"[train {self.cfg.name}] step {i} "
+                          f"loss={rec['loss']:.4f} {dt*1e3:.0f}ms",
+                          flush=True)
+                if self.ckpt is not None and ckpt_every \
+                        and (i + 1) % ckpt_every == 0:
+                    self.ckpt.save(self.state, i + 1)
+        finally:
+            pipe.close()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        self.start_step += n_steps
+        return self.history

@@ -1,0 +1,167 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (FluxMiniCluster, JobSpec, JobState, MiniClusterSpec,
+                        NetModel, ResourceGraph, SimClock, TBON)
+from repro.core.jobspec import Job
+from repro.core.queue import JobQueue
+
+FAST = settings(max_examples=40, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# TBON topology invariants
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(size=st.integers(1, 500), fanout=st.integers(1, 8))
+def test_tbon_is_a_spanning_tree(size, fanout):
+    t = TBON(size, fanout)
+    # every non-root has exactly one parent; root has none
+    assert t.parent(0) is None
+    for r in range(1, size):
+        p = t.parent(r)
+        assert 0 <= p < r, "parents precede children (index-ordered boot)"
+        assert r in t.children(p)
+    # children lists partition 1..size-1
+    seen = []
+    for r in range(size):
+        seen.extend(t.children(r))
+    assert sorted(seen) == list(range(1, size))
+
+
+@FAST
+@given(size=st.integers(2, 500), fanout=st.integers(2, 8))
+def test_tbon_depth_logarithmic(size, fanout):
+    import math
+    t = TBON(size, fanout)
+    worst = max(t.depth(r) for r in range(size))
+    bound = math.ceil(math.log(size * (fanout - 1) + 1, fanout)) + 1
+    assert worst <= bound
+
+
+# ---------------------------------------------------------------------------
+# Resource graph invariants
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=12),
+       st.sampled_from(["first_fit", "best_fit"]))
+def test_allocations_never_overlap(requests, policy):
+    g = ResourceGraph(n_pods=2, hosts_per_pod=8)
+    granted = {}
+    for i, n in enumerate(requests):
+        rset = g.match(n, policy=policy)
+        if rset is not None:
+            g.alloc(rset, i)
+            granted[i] = set(rset.hosts)
+    hosts_used = [h for s in granted.values() for h in s]
+    assert len(hosts_used) == len(set(hosts_used)), "exclusive allocation"
+    # freeing returns every host
+    for i in granted:
+        g.free(i)
+    assert len(g.free_hosts()) == 16
+
+
+@FAST
+@given(st.integers(1, 16))
+def test_match_is_all_or_nothing(n):
+    g = ResourceGraph(n_pods=1, hosts_per_pod=8)
+    rset = g.match(n)
+    if n <= 8:
+        assert rset is not None and rset.n_hosts == n
+    else:
+        assert rset is None
+
+
+# ---------------------------------------------------------------------------
+# Queue invariants
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(st.lists(st.tuples(st.integers(0, 31), st.sampled_from(
+    ["alice", "bob", "carol"])), min_size=1, max_size=30))
+def test_queue_orders_by_priority_then_fifo(jobs):
+    q = JobQueue()
+    for i, (urg, user) in enumerate(jobs):
+        q.submit(Job(spec=JobSpec(urgency=urg, user=user)), now=float(i))
+    sched = q.schedulable()
+    pris = [(j.priority, -j.t_submit) for j in sched]
+    assert pris == sorted(pris, key=lambda p: (-p[0], -p[1]))
+
+
+@FAST
+@given(st.integers(0, 100))
+def test_fairshare_penalizes_heavy_users(n_heavy):
+    q = JobQueue()
+    q.fairshare.charge("heavy", float(n_heavy))
+    q.fairshare.charge("light", 0.001)
+    j_heavy = q.submit(Job(spec=JobSpec(user="heavy")), now=0.0)
+    j_light = q.submit(Job(spec=JobSpec(user="light")), now=0.0)
+    sched = q.schedulable()
+    if n_heavy > 0:
+        assert sched[0].spec.user == "light"
+
+
+def test_illegal_transitions_raise():
+    import pytest
+    j = Job(spec=JobSpec())
+    with pytest.raises(ValueError):
+        j.transition(JobState.RUN)       # DEPEND -> RUN illegal
+
+
+# ---------------------------------------------------------------------------
+# Elasticity invariant: any patch sequence keeps rank 0 alive
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.integers(1, 12), min_size=1, max_size=6))
+def test_any_patch_sequence_preserves_lead(sizes):
+    clock = SimClock(seed=1)
+    net = NetModel()
+    fleet = ResourceGraph(n_pods=1, hosts_per_pod=16)
+    mc = FluxMiniCluster(clock, net, fleet,
+                         MiniClusterSpec(name="p", size=4, max_size=12))
+    mc.create()
+    mc.wait_ready()
+    for s in sizes:
+        mc.patch_size(s)
+        clock.run(until=clock.now + 200)
+        assert mc.pool.brokers[0].state.value == "up"
+        assert mc.pool.n_up() == s
+
+
+# ---------------------------------------------------------------------------
+# Sharding rule invariants
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(st.tuples(st.integers(1, 512), st.integers(1, 512)),
+       st.sampled_from([("embed", "ff"), ("vocab", "embed"),
+                        ("heads", None), ("expert", "embed")]))
+def test_resolve_spec_divisibility(shape, axes):
+    import jax
+    import numpy as np
+    from repro.dist.sharding import resolve_spec, param_rules
+    from repro.configs import OPTIMIZED
+    if len(jax.devices()) != 1:
+        return
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = param_rules(OPTIMIZED)
+    spec = resolve_spec(shape, axes, rules, mesh)
+    # every named mesh axis use must divide the dim
+    for dim, s in zip(shape, tuple(spec)):
+        if s is None:
+            continue
+        axes_used = s if isinstance(s, tuple) else (s,)
+        size = int(np.prod([mesh.shape[a] for a in axes_used]))
+        assert dim % size == 0

@@ -1,0 +1,112 @@
+"""Sequence-mixer oracles: chunked/parallel training forms must match
+step-by-step recurrence exactly (mLSTM, Mamba), and prefill->decode
+continuity must hold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MambaConfig, ModelConfig, XLSTMConfig
+from repro.models import mamba as M
+from repro.models import xlstm as X
+from repro.models import params as P
+
+
+def mk_cfg(kind):
+    return ModelConfig(
+        name="t", family="ssm", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=0, vocab_size=64, pos_type="none",
+        block_pattern=(kind,),
+        mamba=MambaConfig(d_state=8, d_conv=4, expand=2),
+        xlstm=XLSTMConfig(n_heads=4, expand=2, d_conv=4, chunk_size=4))
+
+
+def test_mlstm_chunked_equals_stepwise_decode():
+    cfg = mk_cfg("mlstm")
+    defs = X.mlstm_defs(cfg)
+    params = P.init_params(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 13, 32)) * 0.5
+
+    # parallel (chunked) over the full sequence
+    out_par, _ = X.mlstm_apply(cfg, params, x)
+
+    # strict step-by-step recurrence through the decode path
+    shapes = X.mlstm_cache_shape(cfg, 2)
+    cache = {"conv": jnp.zeros(shapes["conv"]),
+             "C": jnp.zeros(shapes["C"]),
+             "n": jnp.zeros(shapes["n"]),
+             "m": jnp.full(shapes["m"], -1e30)}
+    outs = []
+    for t in range(13):
+        o, cache = X.mlstm_apply(cfg, params, x[:, t:t + 1], cache=cache)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_par), np.asarray(out_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_chunked_equals_stepwise_decode():
+    cfg = mk_cfg("mamba")
+    defs = M.mamba_defs(cfg)
+    params = P.init_params(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 11, 32)) * 0.5
+
+    out_par, _ = M.mamba_apply(cfg, params, x)
+
+    shapes = M.mamba_cache_shape(cfg, 2)
+    cache = {"conv": jnp.zeros(shapes["conv"]),
+             "ssm": jnp.zeros(shapes["ssm"])}
+    outs = []
+    for t in range(11):
+        o, cache = M.mamba_apply(cfg, params, x[:, t:t + 1], cache=cache)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_par), np.asarray(out_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_prefill_state_continues_decode():
+    """prefill(x[:P]) state + decode steps == full parallel on x."""
+    cfg = mk_cfg("mamba")
+    params = P.init_params(M.mamba_defs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32)) * 0.5
+    full, _ = M.mamba_apply(cfg, params, x)
+
+    shapes = M.mamba_cache_shape(cfg, 1)
+    cache = {"conv": jnp.zeros(shapes["conv"]),
+             "ssm": jnp.zeros(shapes["ssm"])}
+    pre, cache = M.mamba_apply(cfg, params, x[:, :8], cache=cache)
+    outs = [pre]
+    for t in range(8, 12):
+        o, cache = M.mamba_apply(cfg, params, x[:, t:t + 1], cache=cache)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_gates_stabilized_no_overflow():
+    """Large gate pre-activations must not produce inf/nan (log-space)."""
+    cfg = mk_cfg("mlstm")
+    params = P.init_params(M_defs := X.mlstm_defs(cfg), jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda a: a * 5.0, params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32)) * 3.0
+    out, _ = X.mlstm_apply(cfg, params, x)
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+def test_slstm_sequential_finite_and_stateful():
+    cfg = mk_cfg("slstm")
+    params = P.init_params(X.slstm_defs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 32)) * 0.5
+    out, _ = X.slstm_apply(cfg, params, x)
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+    # state carries: same input twice with/without cache differs
+    # (boost the recurrent weights — default init is deliberately small)
+    params = dict(params, r=params["r"] * 100.0)
+    shapes = X.slstm_cache_shape(cfg, 2)
+    cache = {k: (jnp.full(v, -1e30) if k == "m" else jnp.zeros(v))
+             for k, v in shapes.items()}
+    o1, cache = X.slstm_apply(cfg, params, x[:, :1], cache=cache)
+    o2, _ = X.slstm_apply(cfg, params, x[:, :1], cache=cache)
+    assert not np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-9)
