@@ -64,24 +64,40 @@ class BurstService:
 
     def start(self):
         self._running = True
+        # schedule-time path: the instance offers unmatched burstable
+        # jobs directly; the periodic tick remains as a backstop for
+        # plugin capacity that frees up later
+        self.mc.instance.burst_hooks.append(self._hook)
         self.clock.call_in(self.interval, self._tick)
 
     def stop(self):
         self._running = False
+        if self._hook in self.mc.instance.burst_hooks:
+            self.mc.instance.burst_hooks.remove(self._hook)
+
+    def _hook(self, job: Job) -> bool:
+        # schedule_loop only offers jobs its own matcher already failed
+        # to place — no need to re-run the graph match
+        return self.offer(job, recheck_local=False)
+
+    def offer(self, job: Job, *, recheck_local: bool = True) -> bool:
+        """Take ``job`` if a plugin can satisfy it."""
+        if not self._running or not self.selector(job):
+            return False
+        if recheck_local and \
+                self.mc.instance.graph.match(job.spec.n_nodes) is not None:
+            return False              # local resources exist; not our job
+        for plugin in self.plugins:
+            if plugin.satisfiable(job):
+                self._burst(job, plugin)
+                return True
+        return False
 
     def _tick(self):
         if not self._running:
             return
-        inst = self.mc.instance
-        for job in inst.queue.schedulable():
-            if not self.selector(job):
-                continue
-            if inst.graph.match(job.spec.n_nodes) is not None:
-                continue              # local resources exist; not our job
-            for plugin in self.plugins:
-                if plugin.satisfiable(job):
-                    self._burst(job, plugin)
-                    break
+        for job in self.mc.instance.queue.schedulable():
+            self.offer(job)
         self.clock.call_in(self.interval, self._tick)
 
     def _burst(self, job: Job, plugin: BurstPlugin):

@@ -18,6 +18,22 @@ from repro.core.resource_graph import ResourceSet
 from repro.core.sim import NetModel, SimClock
 
 
+def smoke_config_for(command: str):
+    """Resolve a job command to a reduced arch config (shared by all
+    executors; unknown commands fall back to the paper's proxy app)."""
+    from repro.configs import registry
+    return registry.smoke(command if command in
+                          registry.ARCH_IDS + registry.EXTRA_IDS
+                          else "lammps-proxy")
+
+
+def tbon_bootstrap_cost(net: NetModel, n_nodes: int, fanout: int) -> float:
+    """flux-pmix wireup through the TBON: O(depth) control RPCs."""
+    import math
+    depth = max(1, math.ceil(math.log(max(n_nodes, 2), fanout)))
+    return depth * net.rpc_latency * 4          # barrier in + out
+
+
 class JaxWorkloadExecutor:
     """Executor for FluxInstance: real compute + structural bootstrap."""
 
@@ -41,14 +57,10 @@ class JaxWorkloadExecutor:
         if command in self._cache:
             return self._cache[command]
         import jax
-        import jax.numpy as jnp
-        from repro.configs import TrainConfig, registry
         from repro.configs.base import WorkloadShape
         from repro.models import Model, example_batch
 
-        cfg = registry.smoke(command if command in
-                             registry.ARCH_IDS + registry.EXTRA_IDS
-                             else "lammps-proxy")
+        cfg = smoke_config_for(command)
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         batch = example_batch(cfg, WorkloadShape("bench", "train", 32, 2))
@@ -70,10 +82,7 @@ class JaxWorkloadExecutor:
         return run
 
     def _bootstrap_cost(self, n_nodes: int) -> float:
-        """flux-pmix wireup through the TBON: O(depth) control RPCs."""
-        import math
-        depth = max(1, math.ceil(math.log(max(n_nodes, 2), self.k)))
-        return depth * self.net.rpc_latency * 4     # barrier in + out
+        return tbon_bootstrap_cost(self.net, n_nodes, self.k)
 
     # -- FluxInstance executor signature ---------------------------------------
     def __call__(self, job: Job, rset: ResourceSet, done):
@@ -96,3 +105,99 @@ class JaxWorkloadExecutor:
                     + self.net.ssh_handshake * 0.02 * len(hosts))
             self.clock.call_in(wall, done, wall)
         return ex
+
+
+class SubmeshExecutor:
+    """Executor that runs a REAL sharded train step on the JAX sub-mesh
+    its job's ``ResourceSet`` describes.
+
+    This is the bridge the paper's resource model implies: the Fluxion
+    graph match produces an allocation (n hosts x chips/host), and the
+    allocation — not a global constant — determines device placement.
+    ``submesh_for`` maps the chip ids onto this process's devices as a
+    ``(data=hosts, model=chips)`` mesh; ``dist/steps.py`` builds the
+    sharded step; the step runs and its measured wall time becomes the
+    simulated job walltime (same structural bootstrap cost as
+    ``JaxWorkloadExecutor``).  Per-job records in ``ran`` expose the
+    mesh each allocation actually executed on.
+    """
+
+    def __init__(self, clock: SimClock, net: NetModel,
+                 tbon_fanout: int = 2, steps: int = 2,
+                 time_scale: float = 1.0, seq_len: int = 32,
+                 strategy=None):
+        self.clock = clock
+        self.net = net
+        self.k = tbon_fanout
+        self.steps = steps
+        self.time_scale = time_scale
+        self.seq_len = seq_len
+        self.strategy = strategy
+        self._cache: Dict = {}
+        self.ran: Dict[int, Dict] = {}
+
+    def _runner(self, command: str, mesh):
+        # keyed on the actual device set AND the mesh shape: a
+        # same-shaped allocation on different hosts must recompile onto
+        # ITS devices (placement is the point of this executor), and two
+        # degraded allocations can share a device prefix yet differ in
+        # shape
+        key = (command, tuple(mesh.devices.shape),
+               tuple(d.id for d in mesh.devices.flat))
+        if key in self._cache:
+            return self._cache[key]
+        import jax
+        from repro.configs import BASELINE, TrainConfig
+        from repro.configs.base import WorkloadShape
+        from repro.dist import steps as dsteps
+        from repro.models import example_batch
+
+        cfg = smoke_config_for(command)
+        strategy = self.strategy or BASELINE
+        tcfg = TrainConfig(total_steps=max(self.steps, 1), warmup_steps=0)
+        # batch rows cover the data axis; at least 2 rows per shard
+        batch_rows = 2 * mesh.shape.get("data", 1)
+        shape = WorkloadShape("submesh", "train", self.seq_len, batch_rows)
+        jitted, sshard, bshard = dsteps.jit_train_step(
+            cfg, tcfg, strategy, mesh, shape)
+        state = dsteps.init_train_state(cfg, tcfg,
+                                        jax.random.PRNGKey(0))
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state, sshard)
+        batch = {k: jax.device_put(v, bshard[k])
+                 for k, v in example_batch(cfg, shape).items()}
+        state, metrics = jitted(state, batch)      # compile outside timing
+        jax.block_until_ready(metrics["loss"])
+
+        holder = {"state": state}
+
+        def run() -> Dict:
+            t0 = time.perf_counter()
+            metrics = None
+            for _ in range(self.steps):
+                holder["state"], metrics = jitted(holder["state"], batch)
+            jax.block_until_ready(metrics["loss"])
+            return {"elapsed": time.perf_counter() - t0,
+                    "loss": float(metrics["loss"])}
+
+        self._cache[key] = run
+        return run
+
+    def __call__(self, job: Job, rset: ResourceSet, done):
+        from repro.dist.sharding import submesh_for
+        mesh = submesh_for(rset)
+        out = self._runner(job.spec.command, mesh)()
+        measured = out["elapsed"] * self.time_scale
+        self.ran[job.jobid] = {
+            "mesh_shape": tuple(mesh.devices.shape),
+            "n_devices": int(mesh.size),
+            "device_ids": [d.id for d in mesh.devices.flat],
+            "hosts": list(rset.hosts),
+            "loss": out["loss"],
+            "measured_s": measured,
+        }
+        wall = measured + tbon_bootstrap_cost(self.net, rset.n_hosts,
+                                              self.k)
+        self.clock.call_in(wall, done, "completed", wall)
+
+

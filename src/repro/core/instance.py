@@ -23,6 +23,8 @@ from repro.core.sim import NetModel, SimClock
 
 # executor: (job, rset, done_cb(result, actual_walltime)) -> None
 Executor = Callable[[Job, ResourceSet, Callable[[str, float], None]], None]
+# burst hook: (job) -> True if an external plugin took the job
+BurstHook = Callable[[Job], bool]
 
 
 class FluxInstance:
@@ -39,6 +41,9 @@ class FluxInstance:
         self.match_policy = match_policy
         self.name = name
         self.children: List["FluxInstance"] = []
+        # bursting plugins (BurstService) register here; unmatched
+        # burstable jobs are offered at schedule time
+        self.burst_hooks: List[BurstHook] = []
         pool.on_lost.append(self._on_node_lost)
         self._paused = False
         self._ingest_busy_until = 0.0
@@ -68,7 +73,10 @@ class FluxInstance:
                                     policy=self.match_policy)
             if rset is None:
                 if job.spec.burstable:
-                    continue         # a bursting plugin may take it
+                    # offer to the bursting plugins; first taker wins
+                    for hook in self.burst_hooks:
+                        if hook(job):
+                            break
                 continue
             self.graph.alloc(rset, job.jobid)
             job.allocation = rset
@@ -125,6 +133,14 @@ class FluxInstance:
 
     def drain(self, host: int):
         self.graph.set_state(host, "draining")
+
+    # -- execution on real devices ---------------------------------------------
+    def attach_submesh_executor(self, **kwargs) -> "FluxInstance":
+        """Execute scheduled jobs as real sharded train steps on the JAX
+        sub-mesh each job's ``ResourceSet`` allocation describes."""
+        from repro.core.executor import SubmeshExecutor
+        self.executor = SubmeshExecutor(self.clock, self.net, **kwargs)
+        return self
 
     # -- hierarchy -------------------------------------------------------------
     def spawn_subinstance(self, rset: ResourceSet,

@@ -136,6 +136,7 @@ class FluxMiniCluster:
         current = sorted(self._assigned)
         want = self._desired
         have = len(current)
+        placed_all = True
         if have < want:
             # create missing ranks lowest-first in batches
             missing = [r for r in range(want) if r not in self._assigned]
@@ -143,7 +144,10 @@ class FluxMiniCluster:
             for rank in batch:
                 host = self._place(rank)
                 if host is None:
-                    self.status.conditions.append("Unschedulable")
+                    # level-triggered conditions are a SET: dedupe, and
+                    # clear again once placement succeeds
+                    self._set_condition("Unschedulable")
+                    placed_all = False
                     break
                 self._assigned[rank] = host
                 # image pull is cached ON THE HOST (paper: a throwaway
@@ -166,7 +170,19 @@ class FluxMiniCluster:
                       if r >= want and r != 0]
             for rank in extras:
                 self._teardown_rank(rank)
+        if placed_all:
+            # desired state is reachable again (placement succeeded, or
+            # the spec shrank): level-triggered conditions must clear
+            self._clear_condition("Unschedulable")
         self._update_status()
+
+    def _set_condition(self, cond: str):
+        if cond not in self.status.conditions:
+            self.status.conditions.append(cond)
+
+    def _clear_condition(self, cond: str):
+        if cond in self.status.conditions:
+            self.status.conditions.remove(cond)
 
     def _place(self, rank: int) -> Optional[int]:
         """1 pod per host (anti-affinity); hosts come from the fleet."""

@@ -1,0 +1,33 @@
+"""Distributed execution substrate.
+
+One sharded-step API shared by every execution surface:
+
+* ``sharding``    — logical-axis -> mesh-axis rule tables, PDef-tree ->
+                    NamedSharding resolution, mesh-shape helpers, and the
+                    ``submesh_for`` bridge from a Flux ``ResourceSet``
+                    allocation to a JAX device sub-mesh;
+* ``actsharding`` — activation constraints: ``constrain`` resolves
+                    ``act_*`` logical names against the active
+                    ``activation_sharding(mesh, strategy)`` context and is
+                    the identity off-mesh (single-device CPU runs);
+* ``steps``       — ``build_train_step`` / ``build_prefill_step`` /
+                    ``build_decode_step`` plus train-state init/abstract
+                    schemas, consumed by the trainer, the serving
+                    launcher, the dry-run, and the submesh executor.
+"""
+from repro.dist import actsharding, sharding  # noqa: F401
+from repro.dist.actsharding import (  # noqa: F401
+    activation_sharding, constrain, model_axis_divides,
+)
+from repro.dist.sharding import (  # noqa: F401
+    make_mesh, param_rules, replicated, resolve_spec, submesh_for,
+)
+
+
+def __getattr__(name):
+    # ``steps`` imports the model facade; loading it lazily keeps the
+    # models -> actsharding import chain acyclic.
+    if name == "steps":
+        import importlib
+        return importlib.import_module("repro.dist.steps")
+    raise AttributeError(name)

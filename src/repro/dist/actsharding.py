@@ -1,0 +1,109 @@
+"""Activation sharding constraints.
+
+Model code marks activations with *logical* ``act_*`` names
+(``constrain(x, "act_batch", None, "act_ff")``).  Inside an
+``activation_sharding(mesh, strategy)`` context those names resolve to
+mesh axes through the strategy's rule table and become
+``with_sharding_constraint``s; outside any context (single-device CPU
+smoke tests, plain ``jax.jit``) ``constrain`` is the identity, so the
+same model file runs anywhere.
+
+The context is entered inside the step functions built by
+``dist/steps.py``, which means it is active exactly while jit traces
+the model — the constraints land in the lowered HLO and nothing
+leaks across steps.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ShardingStrategy
+from repro.dist.sharding import DATA_AXES, Rule, resolve_spec
+
+
+def act_rules(strategy: ShardingStrategy) -> Dict[str, Rule]:
+    """Activation rule table; ``act_*_force`` names apply regardless of
+    the strategy's optional toggles (the call site has already decided
+    sharding is required, e.g. heads unshardable on this mesh)."""
+    tp = "model" if strategy.tensor_parallel else None
+    return {
+        "act_batch": DATA_AXES,
+        "act_seq": tp if strategy.seq_shard_activations else None,
+        "act_seq_force": tp,
+        "act_heads": tp,
+        "act_kv": tp,
+        "act_kv_seq": tp if strategy.kv_seq_axis == "model" else None,
+        "act_ff": tp,
+        "act_vocab": tp,
+        "act_expert": "model" if strategy.expert_parallel else None,
+        "act_inner": tp,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class _ActiveSharding:
+    mesh: Mesh
+    strategy: ShardingStrategy
+    rules: Dict[str, Rule]
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, strategy: ShardingStrategy):
+    """Enter the mesh/strategy under which ``constrain`` resolves."""
+    _CTX.stack.append(_ActiveSharding(mesh, strategy, act_rules(strategy)))
+    try:
+        yield _CTX.stack[-1]
+    finally:
+        _CTX.stack.pop()
+
+
+def current() -> Optional[_ActiveSharding]:
+    return _CTX.stack[-1] if _CTX.stack else None
+
+
+def constrain(x, *names):
+    """Constrain ``x`` dim-by-dim to the named logical activation axes.
+
+    Identity when no ``activation_sharding`` context is active; inside
+    one, unknown/None names and non-dividing axes replicate that dim.
+    """
+    ctx = current()
+    if ctx is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(names)} names for rank-{x.ndim} array")
+    spec = resolve_spec(x.shape, names, ctx.rules, ctx.mesh)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def model_axis_divides(n: int) -> bool:
+    """Whether the active tensor-parallel axis evenly divides ``n``
+    (vacuously true off-mesh and without tensor parallelism)."""
+    ctx = current()
+    if ctx is None or not ctx.strategy.tensor_parallel:
+        return True
+    return n % ctx.mesh.shape.get("model", 1) == 0
+
+
+def activation_spec(mesh: Mesh, strategy: ShardingStrategy, shape,
+                    *names) -> PartitionSpec:
+    """Resolve act names outside a context (output-sharding declarations)."""
+    return resolve_spec(shape, names, act_rules(strategy), mesh)

@@ -1,0 +1,233 @@
+"""Sharded step builders — the one step API every surface consumes.
+
+``build_train_step`` / ``build_prefill_step`` / ``build_decode_step``
+return pure step functions plus the NamedSharding trees for their
+inputs/outputs, so the trainer, the serving launcher, the dry-run's
+compile-only lowering and the operator's submesh executor all run the
+exact same code path; only the mesh differs.  Each step body enters
+``activation_sharding(mesh, strategy)`` so the models' ``constrain``
+marks resolve while jit traces.
+
+Train state is a plain dict ``{"params", "opt", "step"}`` with PDef
+schemas behind it, so the checkpoint manager can materialize abstract
+templates and reshard restores across mesh changes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ShardingStrategy, TrainConfig,
+                                WorkloadShape)
+from repro.dist import sharding as shd
+from repro.dist.actsharding import activation_sharding, activation_spec
+from repro.models import params as P
+from repro.models import transformer
+from repro.models.model import Model, input_specs
+from repro.optim import make_optimizer, opt_state_defs
+
+METRIC_KEYS = ("loss", "xent", "moe_aux")
+
+
+# --------------------------------------------------------------------------
+# Train state: schema, init, shardings
+# --------------------------------------------------------------------------
+
+
+def train_state_defs(cfg: ModelConfig) -> Dict:
+    model_defs = Model(cfg).param_defs()
+    return {"params": model_defs, "opt": opt_state_defs(cfg, model_defs)}
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig) -> Dict:
+    defs = train_state_defs(cfg)
+    return {
+        "params": P.abstract_params(defs["params"],
+                                    jnp.dtype(tcfg.param_dtype)),
+        "opt": P.abstract_params(defs["opt"]),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> Dict:
+    defs = train_state_defs(cfg)
+    kp, ko = jax.random.split(key)
+    return {
+        "params": P.init_params(defs["params"], kp,
+                                jnp.dtype(tcfg.param_dtype)),
+        "opt": P.init_params(defs["opt"], ko),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_shardings(cfg: ModelConfig, strategy: ShardingStrategy,
+                          mesh) -> Dict:
+    defs = train_state_defs(cfg)
+    return {
+        "params": shd.tree_shardings(defs["params"], mesh,
+                                     shd.param_rules(strategy)),
+        "opt": shd.tree_shardings(defs["opt"], mesh,
+                                  shd.opt_rules(strategy)),
+        "step": shd.replicated(mesh),
+    }
+
+
+def batch_shardings(cfg: ModelConfig, shape: WorkloadShape,
+                    strategy: ShardingStrategy, mesh) -> Dict:
+    return {k: shd.batch_sharding(mesh, len(v.shape), v.shape[0], strategy)
+            for k, v in input_specs(cfg, shape).items()}
+
+
+# --------------------------------------------------------------------------
+# Train step
+# --------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                     strategy: ShardingStrategy, mesh,
+                     shape: WorkloadShape):
+    """Returns (step_fn, state_shardings, batch_shardings).
+
+    step_fn(state, batch) -> (new_state, metrics); metrics are scalar
+    (loss, xent, moe_aux, grad_norm, lr).  Microbatched gradient
+    accumulation when ``tcfg.grad_accum > 1``.
+    """
+    model = Model(cfg)
+    update = make_optimizer(cfg, tcfg)
+    cdt = jnp.dtype(tcfg.compute_dtype)
+    ga = max(tcfg.grad_accum, 1)
+
+    def loss_fn(p, mb):
+        loss, metrics = model.loss(p, mb, remat=tcfg.remat,
+                                   compute_dtype=cdt)
+        return loss, {k: metrics[k].astype(jnp.float32)
+                      for k in METRIC_KEYS}
+
+    def step_fn(state, batch):
+        with activation_sharding(mesh, strategy):
+            params = state["params"]
+            if ga == 1:
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                micro = jax.tree_util.tree_map(
+                    lambda a: a.reshape((ga, a.shape[0] // ga)
+                                        + a.shape[1:]), batch)
+
+                def body(carry, mb):
+                    gacc, macc = carry
+                    (_, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    gacc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                    macc = {k: macc[k] + m[k] for k in METRIC_KEYS}
+                    return (gacc, macc), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                m0 = {k: jnp.zeros((), jnp.float32) for k in METRIC_KEYS}
+                (grads, msum), _ = jax.lax.scan(body, (g0, m0), micro)
+                grads = jax.tree_util.tree_map(lambda g: g / ga, grads)
+                metrics = {k: v / ga for k, v in msum.items()}
+            new_p, new_opt, stats = update(grads, state["opt"], params,
+                                           state["step"])
+            new_state = {"params": new_p, "opt": new_opt,
+                         "step": state["step"] + 1}
+            metrics = dict(metrics, grad_norm=stats["grad_norm"],
+                           lr=stats["lr"])
+        return new_state, metrics
+
+    if ga > 1:
+        assert shape.global_batch % ga == 0, (shape.global_batch, ga)
+    return (step_fn, train_state_shardings(cfg, strategy, mesh),
+            batch_shardings(cfg, shape, strategy, mesh))
+
+
+def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                   strategy: ShardingStrategy, mesh, shape: WorkloadShape):
+    """``build_train_step`` + the canonical jit wrapping (state donated,
+    metrics replicated) — what runtime consumers (trainer, submesh
+    executor) use; the dry-run keeps the raw step to lower it itself."""
+    step, sshard, bshard = build_train_step(cfg, tcfg, strategy, mesh,
+                                            shape)
+    jitted = jax.jit(step, in_shardings=(sshard, bshard),
+                     out_shardings=(sshard, shd.replicated(mesh)),
+                     donate_argnums=(0,))
+    return jitted, sshard, bshard
+
+
+# --------------------------------------------------------------------------
+# Serving steps (prefill builds the cache; decode streams tokens)
+# --------------------------------------------------------------------------
+
+
+def _serving_param_shardings(cfg: ModelConfig, strategy: ShardingStrategy,
+                             mesh):
+    return shd.tree_shardings(Model(cfg).param_defs(), mesh,
+                              shd.param_rules(strategy))
+
+
+def _cache_defs(cfg: ModelConfig, shape: WorkloadShape):
+    enc_len = (shape.seq_len // max(cfg.encoder_seq_divisor, 1)
+               if cfg.encoder_layers else 0)
+    return transformer.cache_defs(cfg, shape.global_batch, shape.seq_len,
+                                  enc_len)
+
+
+def _logits_sharding(cfg: ModelConfig, shape: WorkloadShape,
+                     strategy: ShardingStrategy, mesh):
+    from jax.sharding import NamedSharding
+    spec = activation_spec(mesh, strategy,
+                           (shape.global_batch, cfg.vocab_size),
+                           "act_batch", "act_vocab")
+    return NamedSharding(mesh, spec)
+
+
+def build_prefill_step(cfg: ModelConfig, strategy: ShardingStrategy,
+                       mesh, shape: WorkloadShape):
+    """Returns (step, param_shardings, batch_shardings, out_shardings);
+    step(params, batch) -> (last_logits, caches)."""
+    model = Model(cfg)
+
+    def step(params, batch):
+        with activation_sharding(mesh, strategy):
+            return model.prefill(params, batch)
+
+    pshard = _serving_param_shardings(cfg, strategy, mesh)
+    bshard = batch_shardings(cfg, shape, strategy, mesh)
+    out_sh = (_logits_sharding(cfg, shape, strategy, mesh),
+              shd.cache_shardings(_cache_defs(cfg, shape), mesh, strategy))
+    return step, pshard, bshard, out_sh
+
+
+def build_decode_step(cfg: ModelConfig, strategy: ShardingStrategy,
+                      mesh, shape: WorkloadShape):
+    """Returns (step, in_shardings, out_shardings);
+    step(params, caches, tokens, cache_index) -> (logits, new_caches)."""
+    model = Model(cfg)
+
+    def step(params, caches, tokens, cache_index):
+        with activation_sharding(mesh, strategy):
+            return model.decode_step(params, caches, tokens, cache_index)
+
+    cshard = shd.cache_shardings(_cache_defs(cfg, shape), mesh, strategy)
+    in_sh = (_serving_param_shardings(cfg, strategy, mesh), cshard,
+             shd.batch_sharding(mesh, 2, shape.global_batch, strategy),
+             shd.replicated(mesh))
+    out_sh = (_logits_sharding(cfg, shape, strategy, mesh), cshard)
+    return step, in_sh, out_sh
+
+
+# dry-run compatibility name: "serve" cells are decode cells
+build_serve_step = build_decode_step
+
+
+def abstract_serve_inputs(cfg: ModelConfig, shape: WorkloadShape
+                          ) -> Tuple[Dict, jax.ShapeDtypeStruct,
+                                     jax.ShapeDtypeStruct]:
+    caches = P.abstract_params(_cache_defs(cfg, shape), jnp.bfloat16)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches, tokens, idx

@@ -246,6 +246,14 @@ def shd_strategy_for_cache(strategy):
 # ---------------------------------------------------------------------------
 
 
+def _cost_dict(ca):
+    """Normalize Compiled.cost_analysis() across jax versions (dict vs
+    one-element list of dicts)."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 def _merge_coll(full, probe, reps, enc=None, enc_reps=0):
     out = {}
     ops = set(full) | set(probe) | set(enc or {})
@@ -277,7 +285,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod=False, strategy=None,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = dict(compiled.cost_analysis() or {})
+    cost = _cost_dict(compiled.cost_analysis())
     coll = rl.collective_stats(compiled.as_text())
 
     cfg = registry.get(arch)
@@ -289,7 +297,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod=False, strategy=None,
                           strategy=strategy,
                           train_overrides=train_overrides)
     probe_c = probe_l.compile()
-    pcost = dict(probe_c.cost_analysis() or {})
+    pcost = _cost_dict(probe_c.cost_analysis())
     pcoll = rl.collective_stats(probe_c.as_text())
 
     ecost, ecoll, enc_reps = {}, {"by_op": {}, "bytes": 0,
@@ -300,7 +308,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod=False, strategy=None,
                             strategy=strategy,
                             train_overrides=train_overrides, encoder=True)
         enc_c = enc_l.compile()
-        ecost = dict(enc_c.cost_analysis() or {})
+        ecost = _cost_dict(enc_c.cost_analysis())
         ecoll = rl.collective_stats(enc_c.as_text())
 
     for key in ("flops", "bytes accessed"):

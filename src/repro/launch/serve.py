@@ -1,7 +1,12 @@
 """Serving launcher: prefill a batch of prompts, decode with a KV cache.
 
+Runs on the shared sharded-step API (``dist/steps.py``): the same
+``build_prefill_step`` / ``build_decode_step`` the dry-run lowers on the
+production mesh execute here on a local mesh, with params, caches and
+tokens laid out by the step builders' sharding trees.
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --prompt-len 32 --gen 16 --batch 4
+      --prompt-len 32 --gen 16 --batch 4 [--dp 1 --tp 1]
 """
 from __future__ import annotations
 
@@ -26,40 +31,60 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis size")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh axis size")
+    ap.add_argument("--strategy", default="baseline",
+                    choices=["baseline", "optimized"])
     args = ap.parse_args()
 
     cfg = registry.smoke(args.arch)
     total = args.prompt_len + args.gen
-    shape = WorkloadShape("serve", "decode", total, args.batch)
-    mesh = make_local_mesh(1, 1)
-    strategy = BASELINE
+    mesh = make_local_mesh(args.dp, args.tp)
+    strategy = OPTIMIZED if args.strategy == "optimized" else BASELINE
 
     from repro.models import Model, example_batch
     model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+
+    pshape = WorkloadShape("p", "prefill", total, args.batch)
+    dshape = WorkloadShape("d", "decode", total, args.batch)
+    prefill, pshard, bshard, pout = dsteps.build_prefill_step(
+        cfg, strategy, mesh, pshape)
+    decode, in_sh, dout = dsteps.build_decode_step(
+        cfg, strategy, mesh, dshape)
+    jit_prefill = jax.jit(prefill, in_shardings=(pshard, bshard),
+                          out_shardings=pout)
+    jit_decode = jax.jit(decode, in_shardings=in_sh, out_shardings=dout,
+                         donate_argnums=(1,))
+
+    params = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s),
+        model.init(jax.random.PRNGKey(0)), pshard)
 
     # prefill
-    pshape = WorkloadShape("p", "prefill", total, args.batch)
     batch = example_batch(cfg, pshape)
     batch["tokens"] = batch["tokens"].at[:, args.prompt_len:].set(0)
+    batch = {k: jax.device_put(v, bshard[k]) for k, v in batch.items()}
     t0 = time.perf_counter()
-    logits, cache = jax.jit(model.prefill)(params, batch)
+    logits, cache = jit_prefill(params, batch)
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
     # decode loop
-    step = jax.jit(model.decode_step)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
     t0 = time.perf_counter()
     for i in range(args.gen - 1):
-        logits, cache = step(params, cache, tok,
-                             jnp.int32(args.prompt_len + i))
+        logits, cache = jit_decode(params, cache,
+                                   jax.device_put(tok, in_sh[2]),
+                                   jnp.int32(args.prompt_len + i))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"mesh {dict(mesh.shape)} strategy {strategy.name}")
     print(f"prefill {args.prompt_len} toks x{args.batch}: "
           f"{t_prefill*1e3:.1f} ms")
     print(f"decode {args.gen} toks: {t_decode*1e3:.1f} ms "

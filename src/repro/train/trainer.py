@@ -30,13 +30,8 @@ class Trainer:
         self.cfg, self.tcfg, self.shape, self.mesh = cfg, tcfg, shape, mesh
         self.strategy = strategy
         self.seed = seed
-        step_fn, sshard, bshard = dsteps.build_train_step(
+        self._jit_step, sshard, bshard = dsteps.jit_train_step(
             cfg, tcfg, strategy, mesh, shape)
-        import repro.dist.sharding as shd
-        self._jit_step = jax.jit(
-            step_fn, in_shardings=(sshard, bshard),
-            out_shardings=(sshard, shd.replicated(mesh)),
-            donate_argnums=(0,))
         self.state_shardings = sshard
         self.batch_shardings = bshard
         self.ckpt = (CheckpointManager(ckpt_dir) if ckpt_dir else None)

@@ -1,0 +1,67 @@
+"""Minimal property-testing shim used when ``hypothesis`` is absent.
+
+Tier-1 must run with no extra installs, so when the real package is
+missing the property tests fall back to deterministic random sampling:
+each ``@given`` test runs ``max_examples`` times with values drawn from
+a seeded RNG.  Only the strategy surface test_properties.py uses is
+implemented (integers, sampled_from, tuples, lists).  No shrinking, no
+database — the real hypothesis is used whenever it is installed.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class _Strategies:
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda r: r.choice(options))
+
+    @staticmethod
+    def tuples(*ss):
+        return _Strategy(lambda r: tuple(s.sample(r) for s in ss))
+
+    @staticmethod
+    def lists(s, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [s.sample(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+
+st = _Strategies()
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*ss, **kws):
+    def deco(fn):
+        # a fresh zero-arg wrapper (no functools.wraps): pytest must not
+        # mistake the strategy parameters for fixtures
+        def run():
+            rng = random.Random(0)
+            for _ in range(getattr(run, "_max_examples", 20)):
+                fn(*[s.sample(rng) for s in ss],
+                   **{k: s.sample(rng) for k, s in kws.items()})
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco

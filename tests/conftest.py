@@ -1,6 +1,14 @@
 import os
 import sys
 
-# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
-# the host's real device count; only launch/dryrun.py forces 512.
+# Sharding tests need a real multi-device mesh: force 8 host-platform
+# devices BEFORE any jax import locks the device count.  (The dry-run
+# forces 512 in its own process; benches that want the host's true
+# count can unset this.)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

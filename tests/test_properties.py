@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for system invariants."""
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+except ModuleNotFoundError:        # no extra deps in tier-1: see shim
+    from _hypothesis_fallback import HealthCheck, given, settings, st
 
 from repro.core import (FluxMiniCluster, JobSpec, JobState, MiniClusterSpec,
                         NetModel, ResourceGraph, SimClock, TBON)
@@ -150,18 +153,21 @@ def test_any_patch_sequence_preserves_lead(sizes):
 def test_resolve_spec_divisibility(shape, axes):
     import jax
     import numpy as np
-    from repro.dist.sharding import resolve_spec, param_rules
+    from repro.dist.sharding import make_mesh, resolve_spec, param_rules
     from repro.configs import OPTIMIZED
-    if len(jax.devices()) != 1:
-        return
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    nd = len(jax.devices())
+    mesh = (make_mesh((2, nd // 2), ("data", "model")) if nd % 2 == 0
+            and nd > 1 else make_mesh((1, 1), ("data", "model")))
     rules = param_rules(OPTIMIZED)
     spec = resolve_spec(shape, axes, rules, mesh)
-    # every named mesh axis use must divide the dim
+    seen = []
+    # every named mesh axis use must divide the dim, and no mesh axis
+    # may be used twice across the spec
     for dim, s in zip(shape, tuple(spec)):
         if s is None:
             continue
         axes_used = s if isinstance(s, tuple) else (s,)
+        seen.extend(axes_used)
         size = int(np.prod([mesh.shape[a] for a in axes_used]))
         assert dim % size == 0
+    assert len(seen) == len(set(seen))

@@ -62,8 +62,8 @@ def test_checkpoint_roundtrip_and_manager():
 def test_checkpoint_reshard_roundtrip():
     """Restore onto a different sharding layout (elastic restart)."""
     from repro.ckpt import restore_resharded, save_state
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.dist.sharding import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     from jax.sharding import NamedSharding, PartitionSpec
     sh = NamedSharding(mesh, PartitionSpec(None))
     state = {"w": jnp.arange(8, dtype=jnp.float32)}

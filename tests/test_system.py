@@ -92,6 +92,24 @@ def test_autoscaler_queue_metric_grows_then_shrinks():
     assert len(done) == 12
 
 
+def test_unschedulable_condition_deduped():
+    """Repeated reconcile passes must not grow status.conditions."""
+    clock = SimClock(seed=0)
+    net = NetModel()
+    fleet = ResourceGraph(n_pods=1, hosts_per_pod=2)
+    mc = FluxMiniCluster(clock, net, fleet,
+                         MiniClusterSpec(name="u", size=4))
+    mc.create()
+    clock.run(until=clock.now + 50)      # 4 pods want 2 hosts
+    for _ in range(3):
+        mc.reconcile()
+    assert mc.status.conditions.count("Unschedulable") == 1
+    # shrinking the spec to achievable size clears the condition
+    mc.patch_size(2)
+    clock.run(until=clock.now + 50)
+    assert "Unschedulable" not in mc.status.conditions
+
+
 def test_bursting_takes_unschedulable_burstable_job():
     clock, net, fleet, mc = make_cluster(size=4, max_size=8)
     svc = BurstService(clock, net, mc)
