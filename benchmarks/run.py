@@ -15,10 +15,11 @@ def main() -> None:
         print(f"{name},{us:.3f},{derived}")
 
     from benchmarks import (creation, elasticity, kernelbench,
-                            roofline_table, throughput, workload)
+                            roofline_table, serving, throughput, workload)
     mods = [("fig2_creation", creation), ("fig3_fig5_workload", workload),
             ("etcd_throughput", throughput), ("elasticity", elasticity),
-            ("kernels", kernelbench), ("roofline", roofline_table)]
+            ("kernels", kernelbench), ("roofline", roofline_table),
+            ("serving", serving)]
     for name, mod in mods:
         try:
             mod.main(emit)

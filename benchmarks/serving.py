@@ -1,0 +1,99 @@
+"""Serving engine under load: Poisson arrivals at three request rates.
+
+Requests arrive as an open-loop Poisson stream (seeded, so runs are
+comparable across PRs) into a continuous-batching engine; we report
+decode throughput (tokens/s) and time-to-first-token per rate, and
+write ``BENCH_serving.json`` so the serving perf trajectory is recorded
+alongside the CSV emit.
+
+    PYTHONPATH=src python -m benchmarks.serving
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve import Engine, EngineConfig
+
+TINY = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
+                   d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                   vocab_size=256)
+N_REQUESTS = 8
+PROMPT_LEN = 12
+MAX_NEW = 8
+RATES = (2.0, 8.0, 32.0)          # requests / second
+
+OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+
+def _make_engine() -> Engine:
+    eng = Engine(TINY, EngineConfig(n_slots=4, page_size=8,
+                                    max_prompt_len=16, max_seq_len=32))
+    # warm the compile caches so arrival timing measures steady state
+    warm = eng.submit([1] * PROMPT_LEN, max_new_tokens=2)
+    eng.run()
+    assert warm.finished
+    return eng
+
+
+def _run_rate(eng: Engine, rate: float, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, N_REQUESTS))
+    prompts = [rng.integers(0, TINY.vocab_size, PROMPT_LEN).tolist()
+               for _ in range(N_REQUESTS)]
+    reqs = []
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < N_REQUESTS or eng.scheduler.has_work:
+        now = time.perf_counter() - t0
+        while nxt < N_REQUESTS and arrivals[nxt] <= now:
+            reqs.append(eng.submit(prompts[nxt], max_new_tokens=MAX_NEW))
+            nxt += 1
+        if not eng.step() and nxt < N_REQUESTS:
+            time.sleep(max(0.0, min(arrivals[nxt]
+                                    - (time.perf_counter() - t0), 1e-3)))
+    elapsed = time.perf_counter() - t0
+    n_tok = sum(len(r.tokens) for r in reqs)
+    ttfts = sorted(r.ttft for r in reqs)
+    return {
+        "rate_rps": rate,
+        "n_requests": len(reqs),
+        "n_tokens": n_tok,
+        "elapsed_s": elapsed,
+        "tokens_per_s": n_tok / elapsed,
+        "ttft_mean_ms": float(np.mean(ttfts)) * 1e3,
+        "ttft_p50_ms": float(ttfts[len(ttfts) // 2]) * 1e3,
+        "ttft_max_ms": float(ttfts[-1]) * 1e3,
+    }
+
+
+def main(emit):
+    eng = _make_engine()
+    rows = []
+    for rate in RATES:
+        row = _run_rate(eng, rate)
+        rows.append(row)
+        emit(f"serving_poisson_{rate:g}rps",
+             row["elapsed_s"] / row["n_tokens"] * 1e6,
+             f"{row['tokens_per_s']:.1f} tok/s "
+             f"ttft_mean={row['ttft_mean_ms']:.1f}ms "
+             f"ttft_max={row['ttft_max_ms']:.1f}ms")
+    with open(OUT_JSON, "w") as f:
+        json.dump({"arch": TINY.name, "n_requests": N_REQUESTS,
+                   "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+                   "engine": {"n_slots": 4, "page_size": 8,
+                              "max_seq_len": 32},
+                   "rates": rows}, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    def _emit(name, us, derived=""):
+        print(f"{name},{us:.3f},{derived}")
+    main(_emit)
+    print(f"wrote {OUT_JSON}")

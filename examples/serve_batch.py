@@ -1,18 +1,20 @@
-"""Serve a small model with batched requests: prefill a batch of
-prompts, then decode tokens step-by-step with the KV cache.
+"""Serve a small model with continuously batched requests.
+
+A thin client of ``repro.serve.Engine`` (the one sharded-step API every
+surface consumes): requests are submitted at different times, share the
+paged KV cache, and stream tokens as the engine interleaves prefill of
+new arrivals with decode of in-flight slots.
 
     PYTHONPATH=src python examples/serve_batch.py [--arch yi-6b]
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.configs.base import WorkloadShape
-from repro.models import Model, example_batch
+from repro.serve import Engine, EngineConfig
+from repro.serve.paging import round_up
 
 
 def main():
@@ -21,37 +23,43 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = registry.smoke(args.arch)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    total = args.prompt_len + args.gen
-
-    batch = example_batch(cfg, WorkloadShape("p", "prefill", total,
-                                             args.batch))
+    page = 8
+    ecfg = EngineConfig(
+        n_slots=args.batch, page_size=page,
+        max_prompt_len=round_up(args.prompt_len, page),
+        max_seq_len=round_up(args.prompt_len + args.gen, page))
     t0 = time.perf_counter()
-    logits, cache = jax.jit(model.prefill)(params, batch)
-    jax.block_until_ready(logits)
-    print(f"prefill({args.prompt_len} tokens x {args.batch} requests): "
-          f"{(time.perf_counter()-t0)*1e3:.0f} ms (incl. compile)")
+    eng = Engine(cfg, ecfg)
+    rng = np.random.default_rng(0)
 
-    step = jax.jit(model.decode_step)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    generated = [np.asarray(tok)]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, cache = step(params, cache, tok,
-                             jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        generated.append(np.asarray(tok))
-    jax.block_until_ready(tok)
+    # stagger arrivals: half the requests are admitted mid-decode, which
+    # is the continuous-batching path (no restart, no recompile)
+    first = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                     args.prompt_len).tolist(),
+                        max_new_tokens=args.gen,
+                        temperature=args.temperature)
+             for _ in range(max(args.batch // 2, 1))]
+    for _ in range(2):
+        eng.step()
+    late = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                    args.prompt_len).tolist(),
+                       max_new_tokens=args.gen,
+                       temperature=args.temperature)
+            for _ in range(args.batch - len(first))]
+    eng.run()
     dt = time.perf_counter() - t0
-    gen = np.concatenate(generated, axis=1)
-    print(f"decoded {args.gen} tokens/request: "
-          f"{dt/max(args.gen-1,1)*1e3:.1f} ms/token steady-state")
-    for r in range(args.batch):
-        print(f"  request {r}: {gen[r].tolist()}")
+
+    reqs = first + late
+    n_tok = sum(len(r.tokens) for r in reqs)
+    print(f"served {len(reqs)} requests ({len(late)} admitted mid-decode): "
+          f"{n_tok} tokens in {dt*1e3:.0f} ms (incl. compile)")
+    print(f"engine stats: {eng.stats()}")
+    for i, r in enumerate(reqs):
+        print(f"  request {i} (ttft {r.ttft*1e3:.0f} ms): {r.tokens}")
 
 
 if __name__ == "__main__":

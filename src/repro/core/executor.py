@@ -201,3 +201,99 @@ class SubmeshExecutor:
         self.clock.call_in(wall, done, "completed", wall)
 
 
+class ServeExecutor:
+    """Executor that hosts a continuous-batching serving engine on the
+    JAX sub-mesh its job's ``ResourceSet`` describes — the serving
+    sibling of :class:`SubmeshExecutor`.
+
+    A serve job flows through the Flux queue like a train job: the
+    Fluxion match produces an allocation, ``submesh_for`` turns it into
+    a ``(data=hosts, model=chips)`` mesh, and a ``repro.serve.Engine``
+    compiled for that mesh drains the job's request batch.  The job's
+    ``spec.args`` may carry ``prompts`` (list of token-id lists),
+    ``max_new`` and ``temperature``; absent those, ``n_requests``
+    synthetic prompts are served.  Engines are cached per
+    (arch, device-set, mesh-shape), so a long-lived allocation keeps
+    its compiled engine across jobs.  Per-job records in ``ran`` expose
+    the mesh, token counts, throughput and mean TTFT.
+    """
+
+    def __init__(self, clock: SimClock, net: NetModel,
+                 tbon_fanout: int = 2, n_requests: int = 2,
+                 prompt_len: int = 8, max_new: int = 4,
+                 time_scale: float = 1.0, strategy=None,
+                 engine_config=None):
+        self.clock = clock
+        self.net = net
+        self.k = tbon_fanout
+        self.n_requests = n_requests
+        self.prompt_len = prompt_len
+        self.max_new = max_new
+        self.time_scale = time_scale
+        self.strategy = strategy
+        self.engine_config = engine_config
+        self._engines: Dict = {}
+        self.ran: Dict[int, Dict] = {}
+
+    def _engine(self, command: str, mesh):
+        key = (command, tuple(mesh.devices.shape),
+               tuple(d.id for d in mesh.devices.flat))
+        if key in self._engines:
+            return self._engines[key]
+        from repro.configs import BASELINE
+        from repro.serve import Engine, EngineConfig
+        ecfg = self.engine_config or EngineConfig(
+            n_slots=4, page_size=8, max_seq_len=64, max_prompt_len=16)
+        eng = Engine(smoke_config_for(command), ecfg,
+                     strategy=self.strategy or BASELINE, mesh=mesh)
+        # compile outside timing (the executor contract shared with
+        # JaxWorkloadExecutor/SubmeshExecutor): one warm request drives
+        # the default-length prefill and the decode step once
+        warm = eng.submit([1] * min(self.prompt_len, ecfg.max_prompt_len),
+                          max_new_tokens=2)
+        eng.run()
+        assert warm.finished
+        self._engines[key] = eng
+        return eng
+
+    def __call__(self, job: Job, rset: ResourceSet, done):
+        from repro.dist.sharding import submesh_for
+        mesh = submesh_for(rset)
+        eng = self._engine(job.spec.command, mesh)
+        vocab = eng.cfg.vocab_size
+        plen = min(self.prompt_len, eng.ecfg.max_prompt_len)
+        prompts = job.spec.args.get("prompts")
+        if prompts is None:
+            prompts = [[(7 * i + j) % vocab for j in range(plen)]
+                       for i in range(self.n_requests)]
+        prompts = [list(p)[:eng.ecfg.max_prompt_len] for p in prompts]
+        max_new = int(job.spec.args.get("max_new", self.max_new))
+        # clamp to slot capacity so a misconfigured job degrades rather
+        # than killing the simulation loop
+        max_new = max(1, min(max_new, eng.ecfg.max_seq_len
+                             - max(len(p) for p in prompts)))
+        temp = float(job.spec.args.get("temperature", 0.0))
+        t0 = time.perf_counter()
+        reqs = [eng.submit(p, max_new_tokens=max_new, temperature=temp)
+                for p in prompts]
+        eng.run()
+        elapsed = time.perf_counter() - t0
+        n_tok = sum(len(r.tokens) for r in reqs)
+        ttfts = [r.ttft for r in reqs if r.ttft is not None]
+        measured = elapsed * self.time_scale
+        self.ran[job.jobid] = {
+            "mesh_shape": tuple(mesh.devices.shape),
+            "n_devices": int(mesh.size),
+            "device_ids": [d.id for d in mesh.devices.flat],
+            "hosts": list(rset.hosts),
+            "n_requests": len(reqs),
+            "n_tokens": n_tok,
+            "tokens_per_s": n_tok / max(elapsed, 1e-9),
+            "ttft_mean_s": sum(ttfts) / max(len(ttfts), 1),
+            "measured_s": measured,
+        }
+        wall = measured + tbon_bootstrap_cost(self.net, rset.n_hosts,
+                                              self.k)
+        self.clock.call_in(wall, done, "completed", wall)
+
+

@@ -142,6 +142,13 @@ class FluxInstance:
         self.executor = SubmeshExecutor(self.clock, self.net, **kwargs)
         return self
 
+    def attach_serve_executor(self, **kwargs) -> "FluxInstance":
+        """Execute scheduled jobs as serving workloads: each allocation
+        hosts a continuous-batching engine on its own sub-mesh."""
+        from repro.core.executor import ServeExecutor
+        self.executor = ServeExecutor(self.clock, self.net, **kwargs)
+        return self
+
     # -- hierarchy -------------------------------------------------------------
     def spawn_subinstance(self, rset: ResourceSet,
                           executor: Optional[Executor] = None

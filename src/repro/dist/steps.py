@@ -14,7 +14,8 @@ templates and reshard restores across mesh changes.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import dataclasses
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +26,7 @@ from repro.dist import sharding as shd
 from repro.dist.actsharding import activation_sharding, activation_spec
 from repro.models import params as P
 from repro.models import transformer
+from repro.models.layers import PagedView
 from repro.models.model import Model, input_specs
 from repro.optim import make_optimizer, opt_state_defs
 
@@ -186,38 +188,96 @@ def _logits_sharding(cfg: ModelConfig, shape: WorkloadShape,
 
 
 def build_prefill_step(cfg: ModelConfig, strategy: ShardingStrategy,
-                       mesh, shape: WorkloadShape):
+                       mesh, shape: WorkloadShape, ragged: bool = False):
     """Returns (step, param_shardings, batch_shardings, out_shardings);
-    step(params, batch) -> (last_logits, caches)."""
+    step(params, batch) -> (last_logits, caches).
+
+    ``ragged``: the step takes an extra per-row ``last_index`` argument
+    (position of the last real prompt token) and returns its logits —
+    the serving engine pads every prompt to the step's fixed capacity.
+    """
     model = Model(cfg)
 
     def step(params, batch):
         with activation_sharding(mesh, strategy):
             return model.prefill(params, batch)
 
+    def ragged_step(params, batch, last_index):
+        with activation_sharding(mesh, strategy):
+            return model.prefill(params, batch, last_index=last_index)
+
     pshard = _serving_param_shardings(cfg, strategy, mesh)
     bshard = batch_shardings(cfg, shape, strategy, mesh)
     out_sh = (_logits_sharding(cfg, shape, strategy, mesh),
               shd.cache_shardings(_cache_defs(cfg, shape), mesh, strategy))
-    return step, pshard, bshard, out_sh
+    return (ragged_step if ragged else step), pshard, bshard, out_sh
+
+
+# --------------------------------------------------------------------------
+# Paged decode (the serving engine's fixed-slot step)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Physical layout of the paged KV pool for one engine.
+
+    ``n_pages`` counts page 0, the null page: never allocated, it absorbs
+    writes from empty slots and prompt padding.  A slot's capacity is
+    ``pages_per_slot * page_size`` tokens.
+    """
+
+    page_size: int
+    pages_per_slot: int
+    n_pages: int
+
+
+def paged_cache_shardings(cfg: ModelConfig, layout: PagedLayout,
+                          n_slots: int, strategy: ShardingStrategy, mesh):
+    defs = transformer.paged_cache_defs(cfg, n_slots, layout.n_pages,
+                                        layout.page_size)
+    return shd.cache_shardings(defs, mesh, strategy)
 
 
 def build_decode_step(cfg: ModelConfig, strategy: ShardingStrategy,
-                      mesh, shape: WorkloadShape):
-    """Returns (step, in_shardings, out_shardings);
-    step(params, caches, tokens, cache_index) -> (logits, new_caches)."""
+                      mesh, shape: WorkloadShape,
+                      paged: Optional[PagedLayout] = None):
+    """Returns (step, in_shardings, out_shardings).
+
+    Contiguous (default): step(params, caches, tokens, cache_index) ->
+    (logits, new_caches) with one scalar write position for the batch.
+
+    Paged: step(params, pool, tokens, block_table, lengths) ->
+    (logits, new_pool).  ``shape.global_batch`` is the engine's fixed
+    slot count — jit compiles once and continuous batching happens by
+    mutating the block table / lengths between calls.
+    """
     model = Model(cfg)
+    pshard = _serving_param_shardings(cfg, strategy, mesh)
+    tok_sh = shd.batch_sharding(mesh, 2, shape.global_batch, strategy)
+    logit_sh = _logits_sharding(cfg, shape, strategy, mesh)
+
+    if paged is not None:
+        pool_sh = paged_cache_shardings(cfg, paged, shape.global_batch,
+                                        strategy, mesh)
+
+        def paged_step(params, pool, tokens, block_table, lengths):
+            with activation_sharding(mesh, strategy):
+                return model.decode_step(
+                    params, pool, tokens, lengths,
+                    paging=PagedView(block_table, lengths))
+
+        in_sh = (pshard, pool_sh, tok_sh, shd.replicated(mesh),
+                 shd.replicated(mesh))
+        return paged_step, in_sh, (logit_sh, pool_sh)
 
     def step(params, caches, tokens, cache_index):
         with activation_sharding(mesh, strategy):
             return model.decode_step(params, caches, tokens, cache_index)
 
     cshard = shd.cache_shardings(_cache_defs(cfg, shape), mesh, strategy)
-    in_sh = (_serving_param_shardings(cfg, strategy, mesh), cshard,
-             shd.batch_sharding(mesh, 2, shape.global_batch, strategy),
-             shd.replicated(mesh))
-    out_sh = (_logits_sharding(cfg, shape, strategy, mesh), cshard)
-    return step, in_sh, out_sh
+    in_sh = (pshard, cshard, tok_sh, shd.replicated(mesh))
+    return step, in_sh, (logit_sh, cshard)
 
 
 # dry-run compatibility name: "serve" cells are decode cells

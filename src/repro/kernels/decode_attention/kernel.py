@@ -96,3 +96,88 @@ def decode_attention_kernel(q, k, v, cache_len, *, scale=None,
         interpret=interpret,
     )(lens, qg, kp, vp)
     return out.reshape(b, 1, h, d)
+
+
+# --------------------------------------------------------------------------
+# Paged variant: the KV sweep walks the slot's block table instead of a
+# contiguous cache.  Scalar-prefetched block tables let the BlockSpec
+# index maps DMA exactly the pages the slot owns — decode reads scale
+# with the FILLED pages, and no gather materializes the cache in HBM.
+# --------------------------------------------------------------------------
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, page, g):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    np_ = pl.num_programs(2)
+    length = len_ref[bi]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(pi * page < length)            # skip unfilled pages
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # g x d
+        k = k_ref[0, :, 0].astype(jnp.float32)         # page x d
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = pi * page + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)       # g x page
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention_kernel(q, k_pages, v_pages, block_table,
+                                  lengths, *, scale=None, interpret=False):
+    """q: (B, 1, H, D); k_pages, v_pages: (P, page, Hkv, D);
+    block_table: (B, pages_per_slot) int32; lengths: (B,) int32."""
+    b, one, h, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    maxp = block_table.shape[1]
+    g = h // hkv
+    scale = scale or d ** -0.5
+    qg = q[:, 0].reshape(b, hkv, g, d)                  # B Hkv g D
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                          # block_table, lengths
+        grid=(b, hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, hk, pi, bt, ln: (b_, hk, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, hk, pi, bt, ln: (bt[b_, pi], 0, hk, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, hk, pi, bt, ln: (bt[b_, pi], 0, hk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, hk, pi, bt, ln: (b_, hk, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, page=page, g=g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(b, 1, h, d)

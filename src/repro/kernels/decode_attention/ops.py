@@ -1,9 +1,17 @@
-"""jit'd wrapper for the flash-decode kernel (inference only: no VJP)."""
+"""jit'd wrappers for the flash-decode kernels (inference only: no VJP)."""
 from __future__ import annotations
 
-from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_kernel, paged_decode_attention_kernel)
 
 
 def decode_attention(q, k, v, cache_len, *, scale=None, interpret=False):
     return decode_attention_kernel(q, k, v, cache_len, scale=scale,
                                    interpret=interpret)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           scale=None, interpret=False):
+    return paged_decode_attention_kernel(q, k_pages, v_pages, block_table,
+                                         lengths, scale=scale,
+                                         interpret=interpret)

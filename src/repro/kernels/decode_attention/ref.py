@@ -20,8 +20,26 @@ def decode_ref(q, k, v, cache_len, *, scale=None):
     logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
                         k.astype(jnp.float32)) * scale
     pos = jnp.arange(smax)
-    valid = pos < cache_len
-    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    valid = (pos[None] < jnp.reshape(cache_len, (-1,))[:, None])
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def paged_decode_ref(q, k_pages, v_pages, block_table, lengths, *,
+                     scale=None):
+    """Gather-then-attend oracle for the paged layout.
+
+    q: (B, 1, H, D); k_pages, v_pages: (P, page_size, Hkv, D);
+    block_table: (B, pages_per_slot) int32; lengths: (B,) valid tokens.
+    The gather materializes each slot's pages as a contiguous
+    (B, pages_per_slot * page_size) cache, so this is bit-identical to
+    ``decode_ref`` over the equivalent contiguous layout.
+    """
+    b = q.shape[0]
+    _, page, hkv, d = k_pages.shape
+    maxp = block_table.shape[1]
+    k = k_pages[block_table].reshape(b, maxp * page, hkv, d)
+    v = v_pages[block_table].reshape(b, maxp * page, hkv, d)
+    return decode_ref(q, k, v, lengths, scale=scale)

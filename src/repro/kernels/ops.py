@@ -39,6 +39,23 @@ def decode_attention(q, k, v, cache_len, *, scale=None, impl=None):
     return _dec_ref.decode_ref(q, k, v, cache_len, scale=scale)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           scale=None, impl=None):
+    """Decode attention over a block-paged KV pool (see serve/paging.py).
+
+    On TPU the Pallas kernel walks the block table with scalar prefetch
+    (no HBM gather); the ref path gathers pages into a contiguous view.
+    """
+    impl = impl or _auto()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.decode_attention import ops as _dec_ops
+        return _dec_ops.paged_decode_attention(
+            q, k_pages, v_pages, block_table, lengths, scale=scale,
+            interpret=(impl == "interpret"))
+    return _dec_ref.paged_decode_ref(q, k_pages, v_pages, block_table,
+                                     lengths, scale=scale)
+
+
 def rmsnorm(x, weight, *, eps=1e-5, impl=None):
     impl = impl or _auto()
     if impl in ("pallas", "interpret"):

@@ -1,26 +1,25 @@
-"""Serving launcher: prefill a batch of prompts, decode with a KV cache.
+"""Serving launcher: a thin client of the continuous-batching engine.
 
-Runs on the shared sharded-step API (``dist/steps.py``): the same
-``build_prefill_step`` / ``build_decode_step`` the dry-run lowers on the
-production mesh execute here on a local mesh, with params, caches and
-tokens laid out by the step builders' sharding trees.
+All decode mechanics (paged KV cache, slot scheduling, temperature
+sampling) live in ``repro.serve.Engine``, which runs on the shared
+sharded-step API (``dist/steps.py``) — the same builders the dry-run
+lowers on the production mesh drive this local mesh.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --prompt-len 32 --gen 16 --batch 4 [--dp 1 --tp 1]
+      --prompt-len 32 --gen 16 --batch 4 [--dp 1 --tp 1] \
+      [--temperature 0.8]
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import BASELINE, OPTIMIZED, registry
-from repro.configs.base import WorkloadShape
-from repro.dist import steps as dsteps
 from repro.launch.mesh import make_local_mesh
+from repro.serve import Engine, EngineConfig
+from repro.serve.paging import round_up
 
 
 def main():
@@ -31,6 +30,7 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel mesh axis size")
     ap.add_argument("--tp", type=int, default=1,
@@ -40,56 +40,37 @@ def main():
     args = ap.parse_args()
 
     cfg = registry.smoke(args.arch)
-    total = args.prompt_len + args.gen
     mesh = make_local_mesh(args.dp, args.tp)
     strategy = OPTIMIZED if args.strategy == "optimized" else BASELINE
 
-    from repro.models import Model, example_batch
-    model = Model(cfg)
+    ecfg = EngineConfig(
+        n_slots=args.batch, page_size=args.page_size,
+        max_prompt_len=round_up(args.prompt_len, args.page_size),
+        max_seq_len=round_up(args.prompt_len + args.gen, args.page_size))
+    t_build = time.perf_counter()
+    eng = Engine(cfg, ecfg, strategy=strategy, mesh=mesh)
+    t0 = time.perf_counter()                    # serving clock: post-build
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                    args.prompt_len).tolist(),
+                       max_new_tokens=args.gen,
+                       temperature=args.temperature)
+            for _ in range(args.batch)]
+    eng.run()
+    elapsed = time.perf_counter() - t0
 
-    pshape = WorkloadShape("p", "prefill", total, args.batch)
-    dshape = WorkloadShape("d", "decode", total, args.batch)
-    prefill, pshard, bshard, pout = dsteps.build_prefill_step(
-        cfg, strategy, mesh, pshape)
-    decode, in_sh, dout = dsteps.build_decode_step(
-        cfg, strategy, mesh, dshape)
-    jit_prefill = jax.jit(prefill, in_shardings=(pshard, bshard),
-                          out_shardings=pout)
-    jit_decode = jax.jit(decode, in_shardings=in_sh, out_shardings=dout,
-                         donate_argnums=(1,))
-
-    params = jax.tree_util.tree_map(
-        lambda x, s: jax.device_put(x, s),
-        model.init(jax.random.PRNGKey(0)), pshard)
-
-    # prefill
-    batch = example_batch(cfg, pshape)
-    batch["tokens"] = batch["tokens"].at[:, args.prompt_len:].set(0)
-    batch = {k: jax.device_put(v, bshard[k]) for k, v in batch.items()}
-    t0 = time.perf_counter()
-    logits, cache = jit_prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    # decode loop
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, cache = jit_decode(params, cache,
-                                   jax.device_put(tok, in_sh[2]),
-                                   jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"mesh {dict(mesh.shape)} strategy {strategy.name}")
+    n_tok = sum(len(r.tokens) for r in reqs)
+    ttft = [r.ttft for r in reqs]
+    per_tok = (elapsed - max(ttft)) / max(args.gen - 1, 1)
+    print(f"mesh {dict(mesh.shape)} strategy {strategy.name} "
+          f"temperature {args.temperature} "
+          f"(engine build {(t0 - t_build)*1e3:.0f} ms)")
     print(f"prefill {args.prompt_len} toks x{args.batch}: "
-          f"{t_prefill*1e3:.1f} ms")
-    print(f"decode {args.gen} toks: {t_decode*1e3:.1f} ms "
-          f"({t_decode/max(args.gen-1,1)*1e3:.1f} ms/tok)")
-    print("generated ids (row 0):", gen[0][:16])
+          f"ttft {min(ttft)*1e3:.1f}-{max(ttft)*1e3:.1f} ms (incl. compile)")
+    print(f"decode {args.gen} toks x{args.batch}: {n_tok} tokens in "
+          f"{elapsed*1e3:.1f} ms ({per_tok*1e3:.1f} ms/step incl. compile)")
+    print(f"engine stats: {eng.stats()}")
+    print("generated ids (request 0):", reqs[0].tokens[:16])
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ are resolved to mesh axes by ``dist/sharding.py``:
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +21,19 @@ from repro.configs.base import ModelConfig
 from repro.dist.actsharding import constrain
 from repro.kernels import ops
 from repro.models.params import PDef
+
+
+class PagedView(NamedTuple):
+    """Block-table view over a paged KV pool (built by repro/serve).
+
+    With a ``PagedView``, decode attention reads per-request pages out
+    of a shared ``(n_pages, page_size, kv, hd)`` pool instead of one
+    contiguous ``(batch, seq)`` cache; ``lengths`` doubles as the
+    per-slot write position for the incoming token.
+    """
+
+    block_table: jax.Array      # (n_slots, pages_per_slot) int32 page ids
+    lengths: jax.Array          # (n_slots,) int32 filled tokens per slot
 
 # --------------------------------------------------------------------------
 # Norms
@@ -116,12 +129,15 @@ def _project_qkv(cfg, p, x, kv_input=None):
 
 
 def attention_apply(cfg: ModelConfig, p, x, *, positions=None, causal=True,
-                    cache=None, cache_index=None, cross_kv=None):
+                    cache=None, cache_index=None, cross_kv=None,
+                    paging: Optional[PagedView] = None):
     """Self- or cross-attention.
 
     cache: dict(k=(B,Smax,KV,hd), v=...) for decode; ``cache_index`` is the
-    scalar write position.  cross_kv: precomputed (k, v) from the encoder.
-    Returns (out, new_cache_kv | None).
+    scalar write position.  With ``paging`` the cache leaves are instead
+    page pools ``(n_pages, page_size, KV, hd)`` shared by all slots, and
+    the write position is per-row (``paging.lengths``).  cross_kv:
+    precomputed (k, v) from the encoder.  Returns (out, new_cache_kv | None).
     """
     b, s, _ = x.shape
     if cross_kv is not None:
@@ -160,6 +176,18 @@ def attention_apply(cfg: ModelConfig, p, x, *, positions=None, causal=True,
         else:
             out = constrain(out, "act_batch", "act_seq_force", None, None)
         new_kv = (k, v)
+    elif paging is not None:                            # paged decode: s == 1
+        page_size = cache["k"].shape[1]
+        pos = paging.lengths                                       # (B,)
+        page = paging.block_table[jnp.arange(b), pos // page_size]
+        off = pos % page_size
+        ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
+        ck = constrain(ck, None, None, "act_kv", None)
+        cv = constrain(cv, None, None, "act_kv", None)
+        out = ops.paged_decode_attention(q, ck, cv, paging.block_table,
+                                         pos + 1)
+        new_kv = (ck, cv)
     else:                                               # decode: s == 1
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
             cache["k"].dtype), cache_index, axis=1)

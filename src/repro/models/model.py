@@ -71,10 +71,12 @@ class Model:
     # ------------------------------------------------------------ forward
     def _trunk(self, params, tokens, *, mode, caches=None, cache_index=None,
                frames=None, patches=None, remat=True,
-               compute_dtype=jnp.bfloat16):
+               compute_dtype=jnp.bfloat16, paging=None):
         cfg = self.cfg
         s = tokens.shape[1]
         offset = cache_index if mode == "decode" else 0
+        if mode == "decode" and jnp.ndim(cache_index) == 1:
+            offset = 0      # per-slot offsets: rope-positioned archs only
         x = layers.embed_apply(cfg, params["embed"], tokens, compute_dtype,
                                offset=offset)
         if cfg.frontend == "vision" and patches is not None:
@@ -86,13 +88,17 @@ class Model:
             enc_out = transformer.encoder_apply(
                 cfg, params["encoder"], frames.astype(compute_dtype),
                 remat=remat, mode=mode)
-        if mode == "decode":
+        if mode == "decode" and jnp.ndim(cache_index) == 1:
+            # continuous batching: every slot sits at its own position
+            positions = cache_index[:, None] + jnp.arange(s)[None, :]
+        elif mode == "decode":
             positions = jnp.arange(s) + cache_index
         else:
             positions = jnp.arange(s)
         x, new_caches, aux = transformer.stack_apply(
             cfg, params["blocks"], x, positions=positions, caches=caches,
-            cache_index=cache_index, enc_out=enc_out, mode=mode, remat=remat)
+            cache_index=cache_index, enc_out=enc_out, mode=mode, remat=remat,
+            paging=paging)
         logits = layers.logits_apply(cfg, params["embed"], x)
         return logits, new_caches, aux
 
@@ -115,8 +121,12 @@ class Model:
 
     # ------------------------------------------------------------ serving
     def prefill(self, params, batch: Dict, *,
-                compute_dtype=jnp.bfloat16):
-        """Build the KV/state cache for a prompt; returns (last_logits, cache)."""
+                compute_dtype=jnp.bfloat16, last_index=None):
+        """Build the KV/state cache for a prompt; returns (last_logits, cache).
+
+        ``last_index``: per-row position of the last real prompt token
+        (prompts padded to a fixed capacity); default is the final column.
+        """
         seq_len = batch["tokens"].shape[1]
         caches = self.init_cache(batch["tokens"].shape[0], seq_len)
         logits, new_caches, _ = self._trunk(
@@ -124,15 +134,22 @@ class Model:
             cache_index=jnp.int32(0), frames=batch.get("frames"),
             patches=batch.get("patches"), remat=False,
             compute_dtype=compute_dtype)
-        return logits[:, -1], new_caches
+        if last_index is not None:
+            last = logits[jnp.arange(logits.shape[0]), last_index]
+        else:
+            last = logits[:, -1]
+        return last, new_caches
 
     def decode_step(self, params, caches, tokens, cache_index, *,
-                    compute_dtype=jnp.bfloat16):
-        """One token step. tokens: (B, 1); cache_index: scalar position."""
+                    compute_dtype=jnp.bfloat16, paging=None):
+        """One token step. tokens: (B, 1); cache_index: scalar position,
+        or a (B,) vector of per-slot positions under continuous batching
+        (with ``paging``, caches are the page pools of
+        ``transformer.paged_cache_defs``)."""
         logits, new_caches, _ = self._trunk(
             params, tokens, mode="decode", caches=caches,
             cache_index=cache_index, remat=False,
-            compute_dtype=compute_dtype)
+            compute_dtype=compute_dtype, paging=paging)
         return logits[:, -1], new_caches
 
 

@@ -128,13 +128,36 @@ def cache_defs(cfg: ModelConfig, batch: int, seq_len: int,
     return out
 
 
+def paged_cache_defs(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int):
+    """Paged decode-state schema: attention KV lives in one shared page
+    pool per position (``(n_pages, page_size, kv, hd)``, indexed by the
+    engine's block table; page 0 is the never-allocated null page), while
+    seq-mixer states stay slot-major.  Sharding resolves through the same
+    ``cache_rules`` axis names as the contiguous cache."""
+    assert not cfg.encoder_layers, \
+        "paged serving supports decoder-only architectures"
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    base = cache_defs(cfg, n_slots, 1, 0, stacked=False)
+    out = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        c = base[f"p{i}"]
+        if kind == "attn":
+            c = {n: PDef((n_pages, page_size, kv, hd),
+                         (None, None, "kv_heads", None),
+                         init="zeros", dtype="bfloat16")
+                 for n in ("k", "v")}
+        out[f"p{i}"] = stack(c, cfg.n_repeats)
+    return out
+
+
 # --------------------------------------------------------------------------
 # Forward
 # --------------------------------------------------------------------------
 
 
 def _apply_position(cfg, i, p, x, *, positions, cache=None, cache_index=None,
-                    enc_out=None, mode="train"):
+                    enc_out=None, mode="train", paging=None):
     """One pattern position. Returns (x, new_cache, aux)."""
     kind = cfg.block_pattern[i]
     aux = None
@@ -146,7 +169,7 @@ def _apply_position(cfg, i, p, x, *, positions, cache=None, cache_index=None,
             sub = {"k": cache["k"], "v": cache["v"]}
         out, kvs = layers.attention_apply(
             cfg, p["attn"], h, positions=positions, causal=cfg.causal,
-            cache=sub, cache_index=cache_index)
+            cache=sub, cache_index=cache_index, paging=paging)
         if kvs is not None and cache is not None:
             new_cache["k"], new_cache["v"] = kvs
         x = x + out
@@ -194,7 +217,8 @@ def _apply_position(cfg, i, p, x, *, positions, cache=None, cache_index=None,
 
 
 def superblock_apply(cfg: ModelConfig, pslice, x, *, positions, cslice=None,
-                     cache_index=None, enc_out=None, mode="train"):
+                     cache_index=None, enc_out=None, mode="train",
+                     paging=None):
     """One super-block (all pattern positions once).
 
     pslice/cslice: per-layer (unstacked) params/caches keyed "p{i}".
@@ -214,7 +238,7 @@ def superblock_apply(cfg: ModelConfig, pslice, x, *, positions, cslice=None,
         x, nc, aux = _apply_position(
             cfg, i, pslice[key], x, positions=positions,
             cache=cache_i, cache_index=cache_index, enc_out=enc_out,
-            mode=mode)
+            mode=mode, paging=paging)
         new_cs[key] = nc
         if aux is not None:
             aux_acc = aux_acc + aux["moe_aux_loss"]
@@ -223,7 +247,8 @@ def superblock_apply(cfg: ModelConfig, pslice, x, *, positions, cslice=None,
 
 
 def stack_apply(cfg: ModelConfig, blocks, x, *, positions, caches=None,
-                cache_index=None, enc_out=None, mode="train", remat=True):
+                cache_index=None, enc_out=None, mode="train", remat=True,
+                paging=None):
     """Run the full layer stack.
 
     blocks: {"p{i}": stacked params}; caches: same keying or None.
@@ -234,7 +259,8 @@ def stack_apply(cfg: ModelConfig, blocks, x, *, positions, caches=None,
         pslice, cslice = xs
         xc, new_cs, aux = superblock_apply(
             cfg, pslice, xc, positions=positions, cslice=cslice,
-            cache_index=cache_index, enc_out=enc_out, mode=mode)
+            cache_index=cache_index, enc_out=enc_out, mode=mode,
+            paging=paging)
         return (xc, aux_acc + aux), (new_cs if cslice is not None else None)
 
     if mode == "train" and remat:

@@ -1,0 +1,10 @@
+"""Continuous-batching serving: paged KV cache, scheduler, engine.
+
+Built on the dist layer's sharded-step API — the same
+``build_prefill_step`` / ``build_decode_step`` every other surface
+consumes, with a fixed-slot workload shape so jit compiles once and
+requests flow through slots/pages instead of recompiles.
+"""
+from repro.serve.engine import Engine, EngineConfig, sample_tokens  # noqa: F401
+from repro.serve.paging import PageAllocator, init_pool, scatter_prefill  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401

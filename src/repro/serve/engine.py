@@ -1,0 +1,263 @@
+"""Continuous-batching serving engine on the shared sharded-step API.
+
+The engine owns a fixed-slot decode step and a fixed-capacity prefill
+step — both built from ``dist/steps`` builders on one mesh, so jit
+compiles each exactly once.  Requests stream through
+``submit(prompt) -> Request``; each :meth:`Engine.step` tick either
+prefills newly admitted requests (their prompt KV scattered into pages)
+or decodes every in-flight slot, and finished requests are evicted so
+their pages are immediately reusable.  Token selection is temperature
+sampling (Gumbel-max), exact argmax at ``temperature == 0``.
+
+    eng = Engine(registry.smoke("yi-6b"), EngineConfig(n_slots=4))
+    req = eng.submit([1, 2, 3], max_new_tokens=8)
+    for tok in eng.stream(req):
+        ...
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import BASELINE
+from repro.configs.base import ModelConfig, ShardingStrategy, WorkloadShape
+from repro.dist import sharding as shd
+from repro.dist import steps as dsteps
+from repro.models.model import Model
+from repro.serve import paging
+from repro.serve.scheduler import Request, Scheduler
+
+
+def sample_tokens(logits, temps, key):
+    """Per-row temperature sampling: Gumbel-max at ``temps > 0``, exact
+    argmax at ``temps == 0`` (greedy decoding stays bit-deterministic)."""
+    greedy = jnp.argmax(logits, axis=-1)
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    t = jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jnp.argmax(logits.astype(jnp.float32) / t + g, axis=-1)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Fixed shapes of one engine.
+
+    The decode step always compiles exactly once (fixed slots).  For
+    attention-only architectures the prefill step does too: prompts are
+    right-padded to ``max_prompt_len`` and causal masking makes padding
+    invisible.  Seq-mixer (mamba/xlstm) recurrences are NOT masked by
+    padding — pad tokens would contaminate the decode-time state — so
+    sub-quadratic architectures prefill at the exact prompt length with
+    a per-length compile cache instead.
+    """
+
+    n_slots: int = 4              # concurrent requests per step
+    page_size: int = 16           # tokens per KV page
+    max_seq_len: int = 128        # per-slot capacity (prompt + generated)
+    max_prompt_len: int = 64      # prefill step capacity
+    n_pages: int = 0              # 0 -> every slot can reach max_seq_len
+    pad_id: int = 0               # prompt padding token
+
+    def layout(self) -> dsteps.PagedLayout:
+        assert self.max_seq_len % self.page_size == 0
+        assert self.max_prompt_len % self.page_size == 0
+        assert self.max_prompt_len <= self.max_seq_len
+        pps = self.max_seq_len // self.page_size
+        n_pages = self.n_pages or self.n_slots * pps + 1
+        return dsteps.PagedLayout(page_size=self.page_size,
+                                  pages_per_slot=pps, n_pages=n_pages)
+
+
+class Engine:
+    """Driver loop: admission -> prefill -> continuous decode."""
+
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig = EngineConfig(),
+                 *, strategy: ShardingStrategy = BASELINE, mesh=None,
+                 params=None, seed: int = 0):
+        assert not cfg.encoder_layers, \
+            "serving engine: decoder-only architectures"
+        assert cfg.pos_type in ("rope", "none"), \
+            "per-slot positions need rope (or no) position encoding"
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.mesh = mesh if mesh is not None else shd.make_mesh(
+            (1, 1), ("data", "model"), devices=jax.devices()[:1])
+        self.strategy = strategy
+        layout = ecfg.layout()
+        self.layout = layout
+        self.alloc = paging.PageAllocator(ecfg.n_slots, layout)
+        self.scheduler = Scheduler(self.alloc, ecfg.max_prompt_len)
+
+        dshape = WorkloadShape(f"serve{ecfg.n_slots}", "decode",
+                               ecfg.max_seq_len, ecfg.n_slots)
+        raw_decode, din, dout = dsteps.build_decode_step(
+            cfg, strategy, self.mesh, dshape, paged=layout)
+        pshard, pool_sh = din[0], din[1]
+        self._pshard, self._pool_sh = pshard, pool_sh
+        self._repl = shd.replicated(self.mesh)
+
+        def decode_fn(params, pool, tokens, block_table, lengths, temps,
+                      key):
+            logits, pool = raw_decode(params, pool, tokens, block_table,
+                                      lengths)
+            return sample_tokens(logits, temps, key), pool
+
+        self._decode = jax.jit(
+            decode_fn,
+            in_shardings=(pshard, pool_sh, din[2], self._repl, self._repl,
+                          self._repl, self._repl),
+            out_shardings=(self._repl, pool_sh), donate_argnums=(1,))
+        # seq-mixer state is a recurrence over every prefilled token, so
+        # padding would leak into it: those archs prefill at exact length
+        self._exact_prefill = cfg.sub_quadratic
+        self._prefill_cache = {}
+
+        if params is None:
+            params = Model(cfg).init(jax.random.PRNGKey(seed))
+        self.params = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), params, pshard)
+        self.pool = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s),
+            paging.init_pool(cfg, ecfg.n_slots, layout), pool_sh)
+        self._next_token = np.zeros((ecfg.n_slots,), np.int32)
+        self._key = jax.random.PRNGKey(seed + 1)
+        self.n_prefills = 0
+        self.n_decode_steps = 0
+        self.n_generated = 0
+
+    # -- request API --------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               temperature: float = 0.0,
+               eos_id: Optional[int] = None) -> Request:
+        return self.scheduler.submit(Request(
+            prompt=list(prompt), max_new_tokens=max_new_tokens,
+            temperature=temperature, eos_id=eos_id))
+
+    def stream(self, req: Request) -> Iterator[int]:
+        """Yield ``req``'s tokens as they are generated, pumping the
+        engine (other in-flight requests advance too)."""
+        emitted = 0
+        while True:
+            while emitted < len(req.tokens):
+                yield req.tokens[emitted]
+                emitted += 1
+            if req.finished:
+                return
+            if not self.step():
+                return
+
+    def run(self) -> None:
+        """Drive until every submitted request has finished."""
+        while self.step():
+            pass
+
+    # -- engine ticks -------------------------------------------------------
+    def step(self) -> bool:
+        """One tick: admit + prefill new arrivals, else decode in-flight
+        slots.  Returns False when there is no work."""
+        admitted = self.scheduler.admit()
+        if admitted:
+            for req in admitted:
+                self._run_prefill(req)
+            return True
+        if self.scheduler.running:
+            self._run_decode()
+            return True
+        return False
+
+    def _split(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _prefill_for(self, prompt_len: int):
+        """The jitted prefill for this prompt: one fixed-capacity compile
+        for attention-only archs, a per-length cache for seq-mixer archs
+        (exact length keeps padding out of the recurrent state)."""
+        plen = prompt_len if self._exact_prefill \
+            else self.ecfg.max_prompt_len
+        fn = self._prefill_cache.get(plen)
+        if fn is not None:
+            return plen, fn
+        cfg, ps = self.cfg, self.ecfg.page_size
+        cap = paging.round_up(plen, ps)        # KV padded to a page boundary
+        pshape = WorkloadShape(f"serve_prefill{plen}", "prefill", plen, 1)
+        raw_prefill, _, bshard, _ = dsteps.build_prefill_step(
+            cfg, self.strategy, self.mesh, pshape, ragged=True)
+
+        def prefill_fn(params, tokens, last_index, pool, page_rows, slots,
+                       temps, key):
+            logits, pcache = raw_prefill(params, {"tokens": tokens},
+                                         last_index)
+            if cap != plen:
+                pcache = paging.pad_prefill_cache(cfg, pcache, cap)
+            pool = paging.scatter_prefill(cfg, pool, pcache, page_rows,
+                                          slots)
+            return sample_tokens(logits, temps, key), pool
+
+        r = self._repl
+        fn = jax.jit(
+            prefill_fn,
+            in_shardings=(self._pshard, bshard["tokens"], r,
+                          self._pool_sh, r, r, r, r),
+            out_shardings=(r, self._pool_sh), donate_argnums=(3,))
+        self._prefill_cache[plen] = fn
+        return plen, fn
+
+    def _emit(self, req: Request, tok: int) -> None:
+        req.tokens.append(tok)
+        self.n_generated += 1
+        if req.t_first is None:
+            req.t_first = time.perf_counter()
+        if (len(req.tokens) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            self.scheduler.finish(req)
+        else:
+            self._next_token[req.slot] = tok
+
+    def _run_prefill(self, req: Request) -> None:
+        ecfg, slot, plen = self.ecfg, req.slot, len(req.prompt)
+        step_len, prefill = self._prefill_for(plen)
+        tokens = np.full((1, step_len), ecfg.pad_id, np.int32)
+        tokens[0, :plen] = req.prompt
+        npg = -(-step_len // ecfg.page_size)
+        page_rows = self.alloc.block_table[slot:slot + 1, :npg]
+        tok, self.pool = prefill(
+            self.params, tokens, np.array([plen - 1], np.int32), self.pool,
+            np.ascontiguousarray(page_rows),
+            np.array([slot], np.int32),
+            np.array([req.temperature], np.float32), self._split())
+        self.n_prefills += 1
+        self._emit(req, int(tok[0]))
+
+    def _run_decode(self) -> None:
+        active = dict(self.scheduler.running)       # slot -> request
+        for slot in active:
+            self.alloc.ensure_page(slot)
+        temps = np.zeros((self.ecfg.n_slots,), np.float32)
+        for slot, req in active.items():
+            temps[slot] = req.temperature
+        tok, self.pool = self._decode(
+            self.params, self.pool, self._next_token[:, None],
+            self.alloc.block_table.copy(), self.alloc.lengths.copy(),
+            temps, self._split())
+        self.n_decode_steps += 1
+        tok = np.asarray(tok)
+        for slot, req in active.items():
+            self.alloc.advance(slot)
+            self._emit(req, int(tok[slot]))
+
+    # -- stats --------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "n_prefills": self.n_prefills,
+            "n_decode_steps": self.n_decode_steps,
+            "n_generated": self.n_generated,
+            "pages_in_use": self.alloc.pages_in_use(),
+            "free_pages": len(self.alloc.free_pages),
+            "mesh_shape": dict(self.mesh.shape),
+        }

@@ -1,0 +1,166 @@
+"""Block-paged KV cache: page pool + block table + free list.
+
+The engine's KV memory is a fixed pool of ``page_size``-token pages per
+attention position (``transformer.paged_cache_defs``), laid out by the
+same ``cache_rules`` the contiguous cache uses.  A host-side
+:class:`PageAllocator` owns the physical pages: a free list, the
+``(n_slots, pages_per_slot)`` block table, and per-slot fill lengths.
+Page 0 is the *null page* — never allocated, it absorbs KV writes from
+empty slots and prompt padding, so the jitted steps need no masking.
+
+``scatter_prefill`` is the traced scatter adapter: it moves a prefill
+step's contiguous caches into the slot's pages (and slot-major rows for
+seq-mixer state) inside the engine's jitted prefill.  The matching
+gather lives in ``kernels.ops.paged_decode_attention`` — on TPU the
+Pallas kernel walks the block table directly instead of gathering.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.steps import PagedLayout
+from repro.models import params as P
+from repro.models import transformer
+
+NULL_PAGE = 0
+
+
+def round_up(n_tokens: int, page_size: int) -> int:
+    """Smallest page-aligned token count >= ``n_tokens``."""
+    return -(-n_tokens // page_size) * page_size
+
+
+def init_pool(cfg: ModelConfig, n_slots: int, layout: PagedLayout):
+    """Materialize the zeroed page pool / slot-state tree."""
+    defs = transformer.paged_cache_defs(cfg, n_slots, layout.n_pages,
+                                        layout.page_size)
+    return P.tree_map(
+        lambda d: jnp.zeros(d.shape, d.resolve_dtype(jnp.bfloat16)), defs)
+
+
+def pad_prefill_cache(cfg: ModelConfig, pcache, cap: int):
+    """Zero-pad a prefill cache's attention KV seq dim up to ``cap`` (a
+    page multiple) so ``scatter_prefill`` can reshape it into pages.
+    Seq-mixer state has no seq dim and passes through; the padded KV
+    positions are masked by slot lengths until decode overwrites them."""
+    out = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"p{i}"
+        if kind == "attn":
+            out[key] = {
+                n: jnp.pad(a, ((0, 0), (0, 0), (0, cap - a.shape[2]),
+                               (0, 0), (0, 0)))
+                for n, a in pcache[key].items()}
+        else:
+            out[key] = pcache[key]
+    return out
+
+
+def scatter_prefill(cfg: ModelConfig, pool, pcache, page_rows, slots):
+    """Scatter a prefill step's contiguous caches into the pool.
+
+    pcache leaves are ``(reps, B, prefill_len, ...)`` (attention KV) or
+    ``(reps, B, ...)`` (seq-mixer state); ``page_rows`` is ``(B, npg)``
+    destination page ids (null-padded past each prompt's pages) and
+    ``slots`` the ``(B,)`` destination slots.  Traced — runs inside the
+    engine's jitted prefill.
+    """
+    out = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"p{i}"
+        if kind == "attn":
+            new = {}
+            for n in ("k", "v"):
+                dst = pool[key][n]          # (reps, n_pages, page, kv, hd)
+                src = pcache[key][n]        # (reps, B, prefill_len, kv, hd)
+                reps, b, pcap = src.shape[:3]
+                page = dst.shape[2]
+                src = src.reshape(reps, b, pcap // page, page,
+                                  *src.shape[3:])
+                new[n] = dst.at[:, page_rows].set(src.astype(dst.dtype))
+            out[key] = new
+        else:
+            out[key] = {n: pool[key][n].at[:, slots].set(
+                pcache[key][n].astype(pool[key][n].dtype))
+                for n in pcache[key]}
+    return out
+
+
+class PageAllocator:
+    """Host-side page/slot bookkeeping for one engine.
+
+    Admission is length-aware: a request reserves its worst-case page
+    count (prompt + max generated tokens) up front, so decode-time page
+    allocation can never fail mid-flight; the pages themselves are
+    handed out lazily as the sequence grows and returned to the free
+    list the moment the slot is evicted.
+    """
+
+    def __init__(self, n_slots: int, layout: PagedLayout):
+        self.layout = layout
+        self.n_slots = n_slots
+        # LIFO free lists: freed pages are re-used first (the eviction
+        # re-use path the tests pin down)
+        self.free_pages: List[int] = list(range(layout.n_pages - 1, 0, -1))
+        self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        self.block_table = np.zeros((n_slots, layout.pages_per_slot),
+                                    np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self._reserved = np.zeros((n_slots,), np.int64)
+
+    # -- capacity queries ---------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.layout.page_size)
+
+    @property
+    def reserved(self) -> int:
+        return int(self._reserved.sum())
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        total = prompt_len + max_new
+        if total > self.layout.pages_per_slot * self.layout.page_size:
+            return False
+        if not self.free_slots:
+            return False
+        return self.pages_for(total) <= len(self.free_pages) - self.reserved
+
+    # -- slot lifecycle -----------------------------------------------------
+    def admit(self, prompt_len: int, max_new: int) -> int:
+        assert self.can_admit(prompt_len, max_new)
+        slot = self.free_slots.pop()
+        need = self.pages_for(prompt_len)
+        for j in range(need):
+            self.block_table[slot, j] = self.free_pages.pop()
+        self._reserved[slot] = self.pages_for(prompt_len + max_new) - need
+        self.lengths[slot] = prompt_len
+        return slot
+
+    def ensure_page(self, slot: int):
+        """Allocate the page holding position ``lengths[slot]`` (the next
+        write) if the slot does not own it yet."""
+        idx = int(self.lengths[slot]) // self.layout.page_size
+        if self.block_table[slot, idx] == NULL_PAGE:
+            self.block_table[slot, idx] = self.free_pages.pop()
+            self._reserved[slot] -= 1
+
+    def advance(self, slot: int):
+        self.lengths[slot] += 1
+
+    def free(self, slot: int):
+        """Evict: return the slot's pages to the free list."""
+        for j, page in enumerate(self.block_table[slot]):
+            if page != NULL_PAGE:
+                self.free_pages.append(int(page))
+        self.block_table[slot, :] = NULL_PAGE
+        self.lengths[slot] = 0
+        self._reserved[slot] = 0
+        self.free_slots.append(slot)
+
+    # -- stats --------------------------------------------------------------
+    def pages_in_use(self) -> int:
+        return int((self.block_table != NULL_PAGE).sum())

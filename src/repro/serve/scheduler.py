@@ -1,0 +1,106 @@
+"""Request admission + slot lifecycle for the continuous-batching engine.
+
+The scheduler mixes prefill of newly arrived requests with decode of
+in-flight ones: each engine tick first admits as many waiting requests
+as slots/pages allow (first-fit over the arrival queue, so one request
+too long for the current free pages does not starve shorter ones behind
+it), then decodes every running slot in one fixed-shape step.  Finished
+requests are evicted immediately — their slot and pages go back on the
+free lists before the next admission pass.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.serve.paging import PageAllocator
+
+_rids = itertools.count(1)
+
+WAITING, RUNNING, FINISHED = "WAITING", "RUNNING", "FINISHED"
+
+
+@dataclass
+class Request:
+    """One generation request and its streamed output."""
+
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    rid: int = field(default_factory=lambda: next(_rids))
+    state: str = WAITING
+    slot: Optional[int] = None
+    tokens: List[int] = field(default_factory=list)   # generated so far
+    t_submit: float = field(default_factory=time.perf_counter)
+    t_first: Optional[float] = None                   # first-token time
+    t_done: Optional[float] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.state == FINISHED
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+
+class Scheduler:
+    def __init__(self, alloc: PageAllocator, max_prompt_len: int):
+        self.alloc = alloc
+        self.max_prompt_len = max_prompt_len
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}        # slot -> request
+        self.n_finished = 0
+
+    def submit(self, req: Request) -> Request:
+        assert 1 <= len(req.prompt) <= self.max_prompt_len, \
+            f"prompt length {len(req.prompt)} exceeds capacity " \
+            f"{self.max_prompt_len}"
+        assert req.max_new_tokens >= 1
+        total = len(req.prompt) + req.max_new_tokens
+        cap = self.alloc.layout.pages_per_slot * self.alloc.layout.page_size
+        assert total <= cap, \
+            f"request needs {total} tokens; slot capacity is {cap}"
+        # pool capacity too, else an unservable request waits forever
+        usable = self.alloc.layout.n_pages - 1        # page 0 is the null page
+        assert self.alloc.pages_for(total) <= usable, \
+            f"request needs {self.alloc.pages_for(total)} pages; the pool " \
+            f"has {usable}"
+        self.waiting.append(req)
+        return req
+
+    def admit(self) -> List[Request]:
+        """Move admissible waiting requests into slots (length-aware
+        first-fit in arrival order)."""
+        admitted = []
+        skipped: Deque[Request] = deque()
+        while self.waiting:
+            req = self.waiting.popleft()
+            if self.alloc.can_admit(len(req.prompt), req.max_new_tokens):
+                req.slot = self.alloc.admit(len(req.prompt),
+                                            req.max_new_tokens)
+                req.state = RUNNING
+                self.running[req.slot] = req
+                admitted.append(req)
+            else:
+                skipped.append(req)
+                if not self.alloc.free_slots:
+                    break
+        self.waiting = skipped + self.waiting
+        return admitted
+
+    def finish(self, req: Request):
+        """Evict: free the slot and its pages for re-use."""
+        req.state = FINISHED
+        req.t_done = time.perf_counter()
+        del self.running[req.slot]
+        self.alloc.free(req.slot)
+        self.n_finished += 1
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.running)
