@@ -1,3 +1,4 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
-    CheckpointManager, restore_resharded, restore_state, save_state,
+    COMMIT_MARKER, CheckpointManager, load_meta, restore_resharded,
+    restore_state, save_state,
 )

@@ -11,7 +11,10 @@ the layout logic is the part that transfers.
 ``CheckpointManager`` adds: step-tagged directories, retention,
 best-effort async save (snapshot to host in the caller's thread,
 serialize on a worker thread — the step loop never blocks on disk),
-and atomic publish via rename.
+atomic publish via rename, and a terminal ``COMMIT`` marker written
+only after every artifact of a step is on disk — ``latest_step()``
+ignores unmarked (torn) step directories, so a crash mid-save can
+never be restored.
 """
 from __future__ import annotations
 
@@ -35,8 +38,15 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
-def save_state(state, path: str):
-    """Synchronous save: host-gather every leaf, write npz + manifest."""
+def save_state(state, path: str, meta: Optional[Dict] = None):
+    """Synchronous save: host-gather every leaf, write npz + manifest.
+
+    The manifest is reshard-safe: every leaf records its GLOBAL shape
+    and dtype, independent of the mesh the state lived on, and the
+    optional ``meta`` dict (mesh shape, strategy name, ...) is stored
+    under ``__meta__`` as provenance — restore on a different mesh
+    validates shapes against the manifest, never against layout.
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(state)
     arrays, manifest = {}, {}
@@ -48,6 +58,9 @@ def save_state(state, path: str):
         else:
             arrays[f"a{i}"] = arr
             manifest[key] = {"id": f"a{i}", "dtype": str(arr.dtype)}
+        manifest[key]["shape"] = list(arr.shape)
+    if meta is not None:
+        manifest["__meta__"] = meta
     tmp = path + ".tmp.npz"
     np.savez(tmp, **arrays)
     with open(path + ".manifest.json.tmp", "w") as f:
@@ -56,15 +69,26 @@ def save_state(state, path: str):
     os.replace(path + ".manifest.json.tmp", path + ".manifest.json")
 
 
+def load_meta(path: str) -> Optional[Dict]:
+    """Provenance recorded at save time (``None`` for older manifests)."""
+    with open(path + ".manifest.json") as f:
+        return json.load(f).get("__meta__")
+
+
 def _load_flat(path: str) -> Dict[str, np.ndarray]:
     with open(path + ".manifest.json") as f:
         manifest = json.load(f)
     z = np.load(path + ".npz")
     out = {}
     for key, meta in manifest.items():
+        if key == "__meta__":
+            continue
         arr = z[meta["id"]]
         if meta["dtype"] == "bfloat16":
             arr = arr.view(jax.numpy.bfloat16)
+        if "shape" in meta:
+            assert tuple(arr.shape) == tuple(meta["shape"]), \
+                f"{key}: stored {arr.shape} vs manifest {meta['shape']}"
         out[key] = arr
     return out
 
@@ -92,6 +116,9 @@ def restore_resharded(template, shardings, path: str):
         lambda arr, sh: jax.device_put(arr, sh), host_tree, shardings)
 
 
+COMMIT_MARKER = "COMMIT"
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
                  async_save: bool = True):
@@ -100,18 +127,47 @@ class CheckpointManager:
         self.async_save = async_save
         self._worker: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        self._migrate_legacy()
+
+    def _migrate_legacy(self):
+        """Bless complete pre-COMMIT-era step dirs on startup.
+
+        The npz + manifest pair publishes atomically (manifest rename
+        is last), so their JOINT presence was the legacy commit signal;
+        a dir missing either really is torn.  Migration runs only at
+        manager construction — a save torn AFTER init stays invisible
+        for this manager's lifetime regardless of what is on disk.
+        """
+        for d in os.listdir(self.dir):
+            p = os.path.join(self.dir, d)
+            if (d.startswith("step_")
+                    and not os.path.exists(os.path.join(p, COMMIT_MARKER))
+                    and os.path.exists(os.path.join(p,
+                                                    "state.manifest.json"))
+                    and os.path.exists(os.path.join(p, "state.npz"))):
+                with open(os.path.join(p, COMMIT_MARKER), "w") as f:
+                    f.write("migrated\n")
 
     def _step_path(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:08d}", "state")
 
-    def save(self, state, step: int):
-        """Snapshot to host now; serialize on a worker thread."""
+    def save(self, state, step: int, meta: Optional[Dict] = None):
+        """Snapshot to host now; serialize on a worker thread.
+
+        The ``COMMIT`` marker is written strictly AFTER every artifact
+        of the step directory is on disk — it is the transaction commit
+        of the save; a crash anywhere earlier leaves a torn directory
+        that ``latest_step()`` skips.
+        """
         host = jax.tree_util.tree_map(
             lambda x: np.asarray(jax.device_get(x)), state)
         path = self._step_path(step)
 
         def work():
-            save_state(host, path)
+            save_state(host, path, meta=meta)
+            with open(os.path.join(os.path.dirname(path),
+                                   COMMIT_MARKER), "w") as f:
+                f.write(f"{step}\n")
             self._gc()
 
         self.wait()
@@ -127,12 +183,13 @@ class CheckpointManager:
             self._worker = None
 
     def latest_step(self) -> Optional[int]:
+        """Newest COMMITTED step; torn (uncommitted) dirs are invisible."""
         if not os.path.isdir(self.dir):
             return None
         steps = []
         for d in os.listdir(self.dir):
             if d.startswith("step_") and os.path.exists(
-                    os.path.join(self.dir, d, "state.manifest.json")):
+                    os.path.join(self.dir, d, COMMIT_MARKER)):
                 steps.append(int(d.split("_")[1]))
         return max(steps) if steps else None
 
@@ -146,9 +203,16 @@ class CheckpointManager:
         return restore_state(template, path), step
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.dir)
-            if d.startswith("step_"))
-        for s in steps[:-self.keep]:
+        """Retention counts COMMITTED steps only; torn directories (a
+        crashed writer's leftovers) are reclaimed outright."""
+        committed, torn = [], []
+        for d in os.listdir(self.dir):
+            if not d.startswith("step_"):
+                continue
+            if os.path.exists(os.path.join(self.dir, d, COMMIT_MARKER)):
+                committed.append(int(d.split("_")[1]))
+            else:
+                torn.append(int(d.split("_")[1]))
+        for s in sorted(committed)[:-self.keep] + torn:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)

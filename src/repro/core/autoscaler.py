@@ -82,12 +82,15 @@ class Autoscaler:
             return
         want = self.policy.desired(self.mc)
         cur = self.mc._desired
+        # autoscaler-driven patches flow through the same validation /
+        # resize-event path as user patches, tagged with their source so
+        # elastic workloads (and the trace) can tell who resized them
         if want > cur:
-            self.mc.patch_size(want)
+            self.mc.patch_size(want, source="autoscaler")
             self.decisions.append((self.clock.now, cur, want))
         elif want < cur:
             if self.clock.now - self._last_scale_down >= self.stabilization:
-                self.mc.patch_size(want)
+                self.mc.patch_size(want, source="autoscaler")
                 self._last_scale_down = self.clock.now
                 self.decisions.append((self.clock.now, cur, want))
         self.clock.call_in(self.interval, self._tick)

@@ -10,10 +10,13 @@ source of the launcher-time gap in the paper's Figure 5.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
-from typing import Callable, Dict, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
 
-from repro.core.jobspec import Job, JobSpec
+from repro.core.jobspec import Job, JobSpec, JobState
 from repro.core.resource_graph import ResourceSet
 from repro.core.sim import NetModel, SimClock
 
@@ -199,6 +202,305 @@ class SubmeshExecutor:
         wall = measured + tbon_bootstrap_cost(self.net, rset.n_hosts,
                                               self.k)
         self.clock.call_in(wall, done, "completed", wall)
+
+
+@dataclass
+class _ElasticSession:
+    """One elastic train job's state across resizes and requeues."""
+
+    job: Job
+    cfg: object
+    tcfg: object
+    shape: object
+    ckpt: object                      # CheckpointManager (sync saves)
+    seed: int
+    step: int = 0                     # completed optimizer steps
+    losses: List[float] = field(default_factory=list)
+    state: object = None              # device train state (current mesh)
+    jitted: object = None
+    bshard: object = None
+    mesh: object = None
+    generation: int = 0               # bumps on every (re)placement
+    pending: Optional[int] = None     # resize target not yet applied
+    pending_source: str = ""
+    t_resize_sim: Optional[float] = None
+    resize_from: Optional[int] = None
+    t_start_sim: Optional[float] = None
+    segments: List[Dict] = field(default_factory=list)
+    resumes: List[Dict] = field(default_factory=list)
+    _resume_rec: Optional[Dict] = None
+
+
+class ElasticTrainExecutor(SubmeshExecutor):
+    """Train jobs that SURVIVE MiniCluster grow/shrink.
+
+    The elastic-remesh path end to end: ``FluxMiniCluster.patch_size``
+    (user, API or autoscaler — one shared patch path) publishes a
+    resize event through ``on_resize``; this executor checkpoints the
+    running state via ``CheckpointManager`` inside that graceful
+    window, and at the next step boundary — for a grow, once the new
+    ranks have booted into the cluster graph — re-matches the job at
+    the new size, rebuilds the mesh from the updated ``ResourceSet``
+    with ``sharding.submesh_for``, recomputes shardings from the same
+    rule tables, restores with ``ckpt.restore_resharded`` (params AND
+    ZeRO-1 optimizer state), and resumes ``dist/steps.jit_train_step``
+    at the same global batch — the data stream is seeded per
+    ``(seed, step, row)``, so host-count changes cannot perturb it.
+
+    Shrinks that tear the job's hosts out from under it ride the
+    existing requeue path: the reconciler requeues the job, the
+    scheduler re-matches it at the (already patched-down) size, and the
+    fresh placement restores from the checkpoint written at the resize
+    event.  Unlike :class:`SubmeshExecutor`, steps run in CHUNKS across
+    simulator events, so resizes land between optimizer steps exactly
+    as they would against a real train loop.
+
+    ``sim_step_time`` pins the simulated duration of one optimizer step
+    (deterministic event interleaving for tests/benches); when ``None``
+    the measured host wall time is used, as in ``SubmeshExecutor``.
+    """
+
+    def __init__(self, clock: SimClock, net: NetModel,
+                 tbon_fanout: int = 2, total_steps: int = 8,
+                 chunk_steps: int = 1, seq_len: int = 32,
+                 global_batch: int = 8, strategy=None, cfg=None,
+                 tcfg=None, seed: int = 0, ckpt_root: Optional[str] = None,
+                 time_scale: float = 1.0,
+                 sim_step_time: Optional[float] = None):
+        super().__init__(clock, net, tbon_fanout=tbon_fanout,
+                         steps=chunk_steps, time_scale=time_scale,
+                         seq_len=seq_len, strategy=strategy)
+        self.total_steps = total_steps
+        self.chunk_steps = max(chunk_steps, 1)
+        self.global_batch = global_batch
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.seed = seed
+        self.sim_step_time = sim_step_time
+        if ckpt_root is None:
+            # a root we created is ours to reclaim: TemporaryDirectory's
+            # finalizer removes it when the executor is collected
+            self._tmp_root = tempfile.TemporaryDirectory(
+                prefix="elastic-ckpt-")
+            ckpt_root = self._tmp_root.name
+        self.ckpt_root = ckpt_root
+        self.mc = None
+        self.sessions: Dict[int, _ElasticSession] = {}
+
+    # -- reconciler event plumbing --------------------------------------------
+    def bind(self, minicluster) -> "ElasticTrainExecutor":
+        """Subscribe to the MiniCluster's resize events."""
+        self.mc = minicluster
+        minicluster.on_resize.append(self._on_resize)
+        return self
+
+    def _on_resize(self, new_size: int, source: str):
+        """Graceful window: pods have not moved yet — checkpoint NOW."""
+        # a shrink must clamp EVERY live request on the cluster, not
+        # just running ones: a queued/requeued job still asking for
+        # more hosts than the cluster will have becomes permanently
+        # unschedulable otherwise
+        if self.mc is not None:
+            for job in self.mc.instance.queue.jobs.values():
+                if (job.state not in (JobState.CLEANUP, JobState.INACTIVE)
+                        and job.spec.n_nodes > new_size):
+                    job.spec.n_nodes = new_size
+        for ses in self.sessions.values():
+            job = ses.job
+            if job.state != JobState.RUN or ses.state is None:
+                continue
+            ses.ckpt.save(ses.state, ses.step, meta=self._meta(ses, source))
+            ses.pending = new_size
+            ses.pending_source = source
+            ses.t_resize_sim = self.clock.now
+            ses.resize_from = (job.allocation.n_hosts
+                               if job.allocation else None)
+            # the job's resource request follows the cluster: a shrink
+            # that requeues it must re-match at the NEW size
+            job.spec.n_nodes = new_size
+            self.clock.trace("elastic_ckpt", jobid=job.jobid,
+                             step=ses.step, target=new_size, source=source)
+
+    # -- session management ---------------------------------------------------
+    def _meta(self, ses: _ElasticSession, source: str = "") -> Dict:
+        return {
+            "step": ses.step,
+            "strategy": (self.strategy.name if self.strategy is not None
+                         else "baseline"),
+            "mesh_shape": (list(ses.mesh.devices.shape)
+                           if ses.mesh is not None else None),
+            "source": source,
+        }
+
+    def _session(self, job: Job) -> _ElasticSession:
+        ses = self.sessions.get(job.jobid)
+        if ses is not None:
+            return ses
+        from repro.ckpt import CheckpointManager
+        from repro.configs import TrainConfig
+        from repro.configs.base import WorkloadShape
+        cfg = self.cfg or smoke_config_for(job.spec.command)
+        tcfg = self.tcfg or TrainConfig(total_steps=self.total_steps,
+                                        warmup_steps=0)
+        shape = WorkloadShape("elastic", "train", self.seq_len,
+                              self.global_batch)
+        ckpt = CheckpointManager(
+            os.path.join(self.ckpt_root, f"job{job.jobid}"),
+            async_save=False)
+        ses = _ElasticSession(job=job, cfg=cfg, tcfg=tcfg, shape=shape,
+                              ckpt=ckpt, seed=self.seed,
+                              t_start_sim=self.clock.now)
+        self.sessions[job.jobid] = ses
+        return ses
+
+    # -- placement: (re)build the step on this allocation's sub-mesh ----------
+    def __call__(self, job: Job, rset: ResourceSet, done):
+        import jax
+        from repro.configs import BASELINE
+        from repro.dist import steps as dsteps
+        from repro.dist.sharding import submesh_for
+
+        ses = self._session(job)
+        ses.generation += 1
+        gen = ses.generation
+        strategy = self.strategy or BASELINE
+        mesh = submesh_for(rset)
+        t0 = time.perf_counter()
+        jitted, sshard, bshard = dsteps.jit_train_step(
+            ses.cfg, ses.tcfg, strategy, mesh, ses.shape)
+        latest = ses.ckpt.latest_step()
+        if latest is not None:
+            # every (re)placement restarts the application: in-memory
+            # state belongs to devices the job may no longer hold, so
+            # restore the latest COMMITTED checkpoint resharded onto
+            # the new mesh — params and opt state both re-laid-out
+            template = dsteps.abstract_train_state(ses.cfg, ses.tcfg)
+            ses.state, step = ses.ckpt.restore_latest(template, sshard)
+            ses.step = int(step)
+            # steps past the checkpoint re-run after restore: drop them
+            del ses.losses[ses.step:]
+            if ses.t_resize_sim is not None:
+                # the resize timestamp travels IN the record: session
+                # bookkeeping may be reset (e.g. by a no-op re-patch)
+                # before the first post-resume chunk finalizes it
+                ses._resume_rec = {
+                    "jobid": job.jobid,
+                    "transition": f"{ses.resize_from}->{rset.n_hosts}",
+                    "source": ses.pending_source,
+                    "step": ses.step,
+                    "mesh_shape": list(mesh.devices.shape),
+                    "restore_s": time.perf_counter() - t0,
+                    "t_resize_sim": ses.t_resize_sim,
+                }
+                ses.t_resize_sim = None
+        elif ses.state is None:
+            state = dsteps.init_train_state(ses.cfg, ses.tcfg,
+                                            jax.random.PRNGKey(ses.seed))
+            ses.state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), state, sshard)
+        else:
+            # re-placed with live state but no committed checkpoint yet
+            # (fault-path requeue before the first save): the state is
+            # committed to the OLD allocation's devices, so reshard it
+            # through host memory onto the new layout
+            ses.state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(jax.device_get(x), s),
+                ses.state, sshard)
+        ses.jitted, ses.bshard, ses.mesh = jitted, bshard, mesh
+        if ses.pending is not None and rset.n_hosts == ses.pending:
+            ses.pending = None
+        ses.segments.append({"mesh_shape": list(mesh.devices.shape),
+                             "hosts": list(rset.hosts),
+                             "from_step": ses.step, "steps": 0,
+                             "wall_s": 0.0})
+        self.clock.trace("elastic_place", jobid=job.jobid,
+                         hosts=list(rset.hosts),
+                         mesh=list(mesh.devices.shape), step=ses.step)
+        boot = tbon_bootstrap_cost(self.net, rset.n_hosts, self.k)
+        self.clock.call_in(boot, self._chunk, job, ses, gen, done)
+
+    # -- elastic transition at a step boundary --------------------------------
+    def _try_remesh(self, job: Job, ses: _ElasticSession, done) -> bool:
+        """Apply a pending resize: re-match at the new size and restart
+        placement.  Returns False while new ranks are still booting —
+        training continues on the old mesh until the cluster can
+        actually satisfy the new size (grow never pauses the job)."""
+        want = ses.pending
+        if job.allocation is not None and job.allocation.n_hosts == want:
+            # no-op resize: drop ALL the pending bookkeeping, or a later
+            # unrelated re-placement would fabricate a resume record
+            ses.pending = None
+            ses.t_resize_sim = None
+            ses.resize_from = None
+            return False
+        graph = self.mc.instance.graph
+        held = set(job.allocation.hosts) if job.allocation else set()
+        free = [h.hid for h in graph.free_hosts() if h.hid not in held]
+        if len(free) + len(held) < want:
+            return False
+        # capture steps run since the resize event, then trade the old
+        # allocation for one at the new size (old hosts are preferred by
+        # the matcher, so a grow extends rather than migrates)
+        ses.ckpt.save(ses.state, ses.step,
+                      meta=self._meta(ses, ses.pending_source))
+        graph.free(job.jobid)
+        rset = graph.match(want, policy=self.mc.instance.match_policy)
+        assert rset is not None, "remesh match must succeed (checked above)"
+        graph.alloc(rset, job.jobid)
+        job.allocation = rset
+        job.spec.n_nodes = want
+        self.clock.trace("elastic_remesh", jobid=job.jobid,
+                         hosts=list(rset.hosts))
+        self(job, rset, done)
+        return True
+
+    # -- the chunked train loop -----------------------------------------------
+    def _chunk(self, job: Job, ses: _ElasticSession, gen: int, done):
+        import jax
+        from repro.data import synthetic_batch
+
+        if gen != ses.generation or job.state != JobState.RUN:
+            return                     # superseded by a requeue/remesh
+        if ses.pending is not None and self._try_remesh(job, ses, done):
+            return
+        n = min(self.chunk_steps, self.total_steps - ses.step)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            batch = synthetic_batch(ses.cfg, ses.shape, ses.seed, ses.step)
+            batch = {k: jax.device_put(v, ses.bshard[k])
+                     for k, v in batch.items() if not k.startswith("_")}
+            ses.state, metrics = ses.jitted(ses.state, batch)
+            ses.losses.append(float(metrics["loss"]))
+            ses.step += 1
+        elapsed = time.perf_counter() - t0
+        seg = ses.segments[-1]
+        seg["steps"] += n
+        seg["wall_s"] += elapsed
+        if ses._resume_rec is not None:
+            rec = ses._resume_rec
+            rec["first_chunk_s"] = elapsed
+            rec["time_to_resume_s"] = rec["restore_s"] + elapsed
+            rec["sim_resume_gap_s"] = self.clock.now - rec.pop(
+                "t_resize_sim")
+            ses.resumes.append(rec)
+            ses._resume_rec = None
+        dt = (self.sim_step_time * n if self.sim_step_time is not None
+              else elapsed * self.time_scale)
+        if ses.step >= self.total_steps:
+            ses.ckpt.save(ses.state, ses.step, meta=self._meta(ses, "final"))
+            self.ran[job.jobid] = {
+                "mesh_shape": tuple(ses.mesh.devices.shape),
+                "n_devices": int(ses.mesh.size),
+                "hosts": list(job.allocation.hosts),
+                "loss": ses.losses[-1],
+                "steps": ses.step,
+                "n_resumes": len(ses.resumes),
+                "segments": ses.segments,
+            }
+            self.clock.call_in(dt, done, "completed",
+                               self.clock.now + dt - (job.t_run or 0.0))
+        else:
+            self.clock.call_in(dt, self._chunk, job, ses, gen, done)
 
 
 class ServeExecutor:

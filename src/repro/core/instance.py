@@ -149,6 +149,17 @@ class FluxInstance:
         self.executor = ServeExecutor(self.clock, self.net, **kwargs)
         return self
 
+    def attach_elastic_executor(self, minicluster=None, **kwargs):
+        """Execute train jobs elastically: chunked sharded steps that
+        checkpoint/remesh/restore across MiniCluster resizes.  Returns
+        the executor (callers drive resizes and read its sessions)."""
+        from repro.core.executor import ElasticTrainExecutor
+        ex = ElasticTrainExecutor(self.clock, self.net, **kwargs)
+        if minicluster is not None:
+            ex.bind(minicluster)
+        self.executor = ex
+        return ex
+
     # -- hierarchy -------------------------------------------------------------
     def spawn_subinstance(self, rset: ResourceSet,
                           executor: Optional[Executor] = None

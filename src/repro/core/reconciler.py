@@ -80,6 +80,11 @@ class FluxMiniCluster:
                                      self.pool, executor, name=spec.name)
         self._desired = 0
         self._assigned: Dict[int, int] = {}      # rank -> host id
+        # resize listeners: cb(new_size, source) fires SYNCHRONOUSLY in
+        # patch_size, BEFORE any pod is created or torn down — the
+        # graceful-elasticity window where a running workload can
+        # checkpoint (the elastic train executor subscribes here)
+        self.on_resize: List[Callable[[int, str], None]] = []
         self.t_created: Optional[float] = None
         self.t_ready: Optional[float] = None
         self.pool.on_up.append(self._check_ready)
@@ -102,8 +107,17 @@ class FluxMiniCluster:
         # configmap propagation precedes the first pod start
         self.clock.call_in(self.net.configmap_propagate, self.reconcile)
 
-    def patch_size(self, new_size: int):
-        """Elasticity: user/API changes .spec.size; validate then reconcile."""
+    def patch_size(self, new_size: int, source: str = "user"):
+        """Elasticity: .spec.size changes (user patch, API, autoscaler —
+        all share this one validation/patch path); validate, publish the
+        resize event to listeners, then reconcile.
+
+        Listeners fire synchronously BEFORE the etcd write schedules the
+        reconcile: pods only start booting / tearing down after the
+        event, so a subscribed workload gets a consistent point to
+        checkpoint at (graceful shrink) or to start watching for the new
+        ranks (grow).
+        """
         if new_size < 1:
             raise ValueError("cannot scale below 1 (lead broker)")
         if new_size > self.spec.effective_max:
@@ -111,7 +125,9 @@ class FluxMiniCluster:
                 f"cannot scale past maxSize={self.spec.effective_max}")
         self.status.phase = "Scaling"
         self._desired = new_size
-        self.clock.trace("patch_size", size=new_size)
+        self.clock.trace("patch_size", size=new_size, source=source)
+        for cb in list(self.on_resize):
+            cb(new_size, source)
         self.clock.call_in(self.net.etcd_write, self.reconcile)
 
     def delete(self, on_deleted: Optional[Callable[[], None]] = None):
@@ -254,3 +270,10 @@ class FluxMiniCluster:
     def wait_ready(self) -> float:
         self.clock.run(stop_when=lambda: self.status.phase == "Ready")
         return self.t_ready - self.t_created
+
+    def attach_elastic_executor(self, **kwargs):
+        """Run this MiniCluster's train jobs elastically: the executor
+        subscribes to resize events and carries running jobs across
+        grow/shrink via checkpoint -> remesh -> resharded restore."""
+        return self.instance.attach_elastic_executor(minicluster=self,
+                                                     **kwargs)

@@ -15,6 +15,7 @@ templates and reshard restores across mesh changes.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -147,16 +148,42 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             batch_shardings(cfg, shape, strategy, mesh))
 
 
+# Compiled-step cache keyed on everything that determines the lowering:
+# the (frozen, hashable) configs plus the mesh's axis names, shape and
+# EXACT device set.  Elastic remesh rebuilds the step on every resize;
+# without this cache a grow->shrink cycle that returns to an
+# already-seen mesh would re-trace and re-compile from scratch, turning
+# time-to-resume from milliseconds into seconds.  LRU-bounded so a
+# long-lived operator process cycling through many (config, mesh)
+# combinations cannot retain compiled executables forever.
+_JIT_TRAIN_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+_JIT_TRAIN_CACHE_MAX = 32
+
+
+def mesh_cache_key(mesh) -> Tuple:
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
 def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                    strategy: ShardingStrategy, mesh, shape: WorkloadShape):
     """``build_train_step`` + the canonical jit wrapping (state donated,
     metrics replicated) — what runtime consumers (trainer, submesh
-    executor) use; the dry-run keeps the raw step to lower it itself."""
+    executor, elastic remesh) use; the dry-run keeps the raw step to
+    lower it itself.  Memoized per (configs, workload, exact mesh)."""
+    key = (cfg, tcfg, strategy, shape, mesh_cache_key(mesh))
+    hit = _JIT_TRAIN_CACHE.get(key)
+    if hit is not None:
+        _JIT_TRAIN_CACHE.move_to_end(key)
+        return hit
     step, sshard, bshard = build_train_step(cfg, tcfg, strategy, mesh,
                                             shape)
     jitted = jax.jit(step, in_shardings=(sshard, bshard),
                      out_shardings=(sshard, shd.replicated(mesh)),
                      donate_argnums=(0,))
+    _JIT_TRAIN_CACHE[key] = (jitted, sshard, bshard)
+    while len(_JIT_TRAIN_CACHE) > _JIT_TRAIN_CACHE_MAX:
+        _JIT_TRAIN_CACHE.popitem(last=False)
     return jitted, sshard, bshard
 
 

@@ -8,6 +8,15 @@ Production scale: the same entry point with --production lowers the
 full config against the 16x16 production mesh (requires 256 devices —
 on real hardware the jax distributed runtime provides them; here the
 dry-run path in launch/dryrun.py is the no-hardware proof).
+
+Elastic: --elastic splits the run into grow/shrink phases across this
+host's devices — the trainer checkpoints, reshards and resumes at each
+transition (the same remesh path the operator's ElasticTrainExecutor
+drives from MiniCluster patch_size events):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --elastic --steps 12 --batch 8 --seq 64
 """
 from __future__ import annotations
 
@@ -19,6 +28,14 @@ from repro.configs import BASELINE, OPTIMIZED, SHAPES, TrainConfig, registry
 from repro.configs.base import WorkloadShape
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.train import Trainer
+
+
+def phase_steps(total: int, n_phases: int):
+    """Split ``total`` steps over the elastic phases, front-loaded so
+    the sum is EXACTLY ``total`` and trailing phases may get 0 (those
+    are skipped — never a negative run, never an overrun)."""
+    base, rem = divmod(total, n_phases)
+    return [base + (1 if i < rem else 0) for i in range(n_phases)]
 
 
 def main():
@@ -37,6 +54,9 @@ def main():
     ap.add_argument("--strategy", default="baseline",
                     choices=["baseline", "optimized"])
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--elastic", action="store_true",
+                    help="smoke-only: run grow/shrink mesh phases with "
+                         "checkpoint-resharded transitions in between")
     args = ap.parse_args()
 
     strategy = OPTIMIZED if args.strategy == "optimized" else BASELINE
@@ -51,9 +71,28 @@ def main():
 
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(args.steps // 10, 1))
-    tr = Trainer(cfg, tcfg, shape, mesh, strategy=strategy,
-                 ckpt_dir=args.ckpt_dir)
-    hist = tr.run(args.steps, ckpt_every=args.ckpt_every, log_every=5)
+    if args.elastic:
+        assert not args.production, "--elastic is a smoke-mode proof"
+        nd = len(jax.devices())
+        grown = (min(2, nd), nd // min(2, nd))
+        phases = [(1, 1), grown, (1, 1)] if nd > 1 else [(1, 1)]
+        tr = Trainer(cfg, tcfg, shape, make_local_mesh(*phases[0]),
+                     strategy=strategy, ckpt_dir=args.ckpt_dir)
+        hist, started = [], False
+        for (d, m), n in zip(phases, phase_steps(args.steps, len(phases))):
+            if n == 0:
+                continue
+            if started:
+                dt = tr.remesh(make_local_mesh(d, m))
+                print(f"[elastic] remesh -> mesh (data={d}, model={m}) "
+                      f"resumed at step {tr.start_step} in {dt:.2f}s",
+                      flush=True)
+            started = True
+            hist = tr.run(n, ckpt_every=args.ckpt_every, log_every=5)
+    else:
+        tr = Trainer(cfg, tcfg, shape, mesh, strategy=strategy,
+                     ckpt_dir=args.ckpt_dir)
+        hist = tr.run(args.steps, ckpt_every=args.ckpt_every, log_every=5)
     print(f"final loss: {hist[-1]['loss']:.4f} "
           f"(first {hist[0]['loss']:.4f})")
 

@@ -57,6 +57,38 @@ class Trainer:
                 self.state_shardings)
         return "initialized"
 
+    # ------------------------------------------------------------------
+    def remesh(self, mesh, *, strategy: Optional[ShardingStrategy] = None
+               ) -> float:
+        """Elastic transition between ``run()`` calls: checkpoint,
+        rebuild the jitted step on the new mesh (same rule tables, so
+        shardings follow the strategy), restore resharded — params and
+        opt state — and resume at the same step/global batch.  Without
+        a checkpoint manager the reshard happens through host memory.
+        Returns host seconds spent in the transition."""
+        t0 = time.perf_counter()
+        if strategy is not None:
+            self.strategy = strategy
+        self._jit_step, sshard, bshard = dsteps.jit_train_step(
+            self.cfg, self.tcfg, self.strategy, mesh, self.shape)
+        self.mesh = mesh
+        self.state_shardings = sshard
+        self.batch_shardings = bshard
+        if self.state is not None:
+            template = dsteps.abstract_train_state(self.cfg, self.tcfg)
+            if self.ckpt is not None:
+                self.ckpt.save(self.state, self.start_step)
+                self.ckpt.wait()
+                self.state, step = self.ckpt.restore_latest(template,
+                                                            sshard)
+                assert int(step) == self.start_step
+            else:
+                host = jax.tree_util.tree_map(
+                    lambda x: np.asarray(jax.device_get(x)), self.state)
+                self.state = jax.tree_util.tree_map(
+                    lambda a, s: jax.device_put(a, s), host, sshard)
+        return time.perf_counter() - t0
+
     def _put_batch(self, batch):
         out = {}
         for k, v in batch.items():

@@ -1,0 +1,278 @@
+"""Elastic remesh: train jobs survive MiniCluster grow/shrink.
+
+The invariant this suite pins (ISSUE 3 acceptance): a run that grows
+2 -> 4 hosts and later shrinks 4 -> 2 mid-training produces the SAME
+loss trajectory (per-step allclose) as an uninterrupted fixed-mesh run
+at the same global batch — because the resize path is checkpoint ->
+submesh rebuild -> resharded restore (params + ZeRO-1 opt state) ->
+resume at the same step, and the data stream is seeded per
+(seed, step, row) so host counts cannot perturb it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import BASELINE, TrainConfig
+from repro.configs.base import ModelConfig, ShardingStrategy, WorkloadShape
+from repro.core import (Autoscaler, FluxMiniCluster, JobSpec, JobState,
+                        MiniClusterSpec, NetModel, ResourceGraph, SimClock)
+from repro.dist import steps as dsteps
+from repro.dist.sharding import make_mesh
+
+TINY = ModelConfig(name="tiny-elastic", family="dense", n_layers=2,
+                   d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                   vocab_size=128)
+ZERO3 = ShardingStrategy(name="zero3", fsdp_params=True,
+                         tensor_parallel=False)
+TOTAL = 18
+SHAPE = WorkloadShape("elastic", "train", 16, 8)
+
+
+def _need_8():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (conftest forces them)")
+
+
+def _run_until(clock, cond, horizon=50_000.0):
+    """Bounded sim wait: heartbeats keep the event queue alive forever,
+    so a missed condition must fail loudly, never hang the suite."""
+    clock.run(until=clock.now + horizon, stop_when=cond)
+    assert cond(), "sim condition not reached within horizon"
+
+
+def _elastic_cluster(strategy, total_steps=TOTAL, seed=0):
+    """A 2-host MiniCluster (maxSize 4) running one elastic train job."""
+    clock = SimClock(seed=seed)
+    fleet = ResourceGraph(n_pods=1, hosts_per_pod=4, chips_per_host=2)
+    mc = FluxMiniCluster(clock, NetModel(), fleet,
+                         MiniClusterSpec(name="el", size=2, max_size=4))
+    ex = mc.attach_elastic_executor(
+        cfg=TINY, total_steps=total_steps, strategy=strategy,
+        sim_step_time=20.0, global_batch=SHAPE.global_batch,
+        seq_len=SHAPE.seq_len)
+    mc.create()
+    mc.wait_ready()
+    job = mc.instance.submit(JobSpec(n_nodes=2, walltime=1e9,
+                                     command="tiny-elastic"))
+    _run_until(clock, lambda: job.jobid in ex.sessions
+               and ex.sessions[job.jobid].step >= 1)
+    return clock, mc, ex, job
+
+
+def _fixed_mesh_losses(strategy, tcfg, n_steps, seed=0):
+    """Uninterrupted reference on a fixed (2, 2) mesh, same global batch."""
+    from repro.data import synthetic_batch
+    mesh = make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
+    jitted, sshard, bshard = dsteps.jit_train_step(TINY, tcfg, strategy,
+                                                   mesh, SHAPE)
+    state = dsteps.init_train_state(TINY, tcfg, jax.random.PRNGKey(seed))
+    state = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), state, sshard)
+    losses = []
+    for i in range(n_steps):
+        b = synthetic_batch(TINY, SHAPE, seed, i)
+        b = {k: jax.device_put(v, bshard[k]) for k, v in b.items()}
+        state, m = jitted(state, b)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+# ---------------------------------------------------------------------------
+# The elastic invariant (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", [BASELINE, ZERO3],
+                         ids=["tp", "fsdp"])
+def test_grow_shrink_preserves_loss_trajectory(strategy):
+    """Grow 2->4 mid-training, shrink 4->2 later: the per-step losses
+    must match an uninterrupted fixed-mesh run allclose, for both a
+    tensor-parallel and an FSDP sharding strategy."""
+    _need_8()
+    clock, mc, ex, job = _elastic_cluster(strategy)
+    ses = ex.sessions[job.jobid]
+
+    _run_until(clock, lambda: ses.step >= 3)
+    step_at_grow = ses.step
+    mc.patch_size(4)                                   # grow mid-training
+    _run_until(clock, lambda: ses.step >= 12
+               and tuple(ses.mesh.devices.shape)[0] >= 4)
+    assert tuple(ses.mesh.devices.shape) == (4, 2)
+    mc.patch_size(2)                                   # shrink mid-training
+    _run_until(clock, lambda: job.state == JobState.INACTIVE)
+
+    assert job.result == "completed"
+    assert ses.step == TOTAL and len(ses.losses) == TOTAL
+    assert tuple(ses.mesh.devices.shape) == (2, 2)
+    # both transitions actually happened, each via ckpt -> reshard
+    assert [r["transition"] for r in ses.resumes] == ["2->4", "4->2"]
+    assert all(r["time_to_resume_s"] > 0 for r in ses.resumes)
+    # grow never pauses the job: steps kept landing on the old mesh
+    # while the new ranks paid boot + cold image pull
+    assert ses.resumes[0]["step"] > step_at_grow
+
+    ref = _fixed_mesh_losses(strategy, ses.tcfg, TOTAL)
+    np.testing.assert_allclose(ses.losses, ref, rtol=2e-3, atol=1e-5)
+
+
+def test_shrink_requeues_and_restores_from_committed_ckpt():
+    """A shrink that tears hosts out from under the job rides the
+    requeue path: re-matched at the patched-down size, restored from
+    the checkpoint written in the graceful window."""
+    _need_8()
+    clock, mc, ex, job = _elastic_cluster(BASELINE, total_steps=8)
+    ses = ex.sessions[job.jobid]
+    _run_until(clock, lambda: ses.step >= 3)
+    assert job.spec.n_nodes == 2
+    mc.patch_size(1)
+    # the resize event checkpointed synchronously, before any teardown
+    assert ses.ckpt.latest_step() is not None
+    assert job.spec.n_nodes == 1                # request follows the patch
+    _run_until(clock, lambda: job.state == JobState.INACTIVE)
+    assert job.result == "completed" and ses.step == 8
+    assert tuple(ses.mesh.devices.shape) == (1, 2)
+    assert ses.resumes and ses.resumes[-1]["transition"] == "2->1"
+    ref = _fixed_mesh_losses(BASELINE, ses.tcfg, 8)
+    np.testing.assert_allclose(ses.losses, ref, rtol=2e-3, atol=1e-5)
+
+
+def test_noop_repatch_during_resume_window_is_harmless():
+    """Re-affirming the current size right after a grow placement (the
+    boot window before the first post-resume chunk) must neither crash
+    the chunk loop nor fabricate an extra resume record."""
+    _need_8()
+    clock, mc, ex, job = _elastic_cluster(BASELINE, total_steps=12)
+    ses = ex.sessions[job.jobid]
+    _run_until(clock, lambda: ses.step >= 3)
+    mc.patch_size(4)
+    # stop exactly at placement: mesh rebuilt, first chunk not yet run
+    _run_until(clock, lambda: tuple(ses.mesh.devices.shape) == (4, 2))
+    assert ses._resume_rec is not None
+    mc.patch_size(4)                           # no-op re-patch
+    _run_until(clock, lambda: job.state == JobState.INACTIVE)
+    assert job.result == "completed" and ses.step == 12
+    assert [r["transition"] for r in ses.resumes] == ["2->4"]
+    assert ses.resumes[0]["sim_resume_gap_s"] >= 0
+
+
+def test_elastic_phase_steps_cover_budget_exactly():
+    from repro.launch.train import phase_steps
+    for total in (1, 2, 3, 7, 9):
+        counts = phase_steps(total, 3)
+        assert sum(counts) == total
+        assert all(c >= 0 for c in counts)
+        assert counts[0] >= 1                  # first phase always runs
+
+
+def test_node_death_before_first_checkpoint_reshards_in_memory():
+    """A fault-path requeue with NO committed checkpoint yet must not
+    wedge the job: the state reshards through host memory onto the new
+    allocation's devices and the run completes with the trajectory
+    intact (nothing is lost, so it stays exactly on the fixed-mesh
+    curve)."""
+    _need_8()
+    from repro.core import kill_node
+    clock, mc, ex, job = _elastic_cluster(BASELINE, total_steps=8)
+    ses = ex.sessions[job.jobid]
+    assert ses.ckpt.latest_step() is None      # no resize, no checkpoint
+    kill_node(clock, mc, rank=1, at=clock.now + 1.0)
+    _run_until(clock, lambda: job.state == JobState.INACTIVE)
+    assert job.result == "completed" and ses.step == 8
+    assert job.requeues >= 1
+    # re-placed on a different host set than the original {0, 1}
+    assert ses.segments[-1]["hosts"] != ses.segments[0]["hosts"]
+    ref = _fixed_mesh_losses(BASELINE, ses.tcfg, 8)
+    np.testing.assert_allclose(ses.losses, ref, rtol=2e-3, atol=1e-5)
+
+
+def test_shrink_clamps_queued_jobs_too():
+    """A shrink must clamp the host request of jobs still WAITING in
+    the queue, or they can never match the smaller cluster."""
+    _need_8()
+    clock, mc, ex, job = _elastic_cluster(BASELINE, total_steps=4)
+    queued = mc.instance.submit(JobSpec(n_nodes=2, walltime=1e9,
+                                        command="tiny-elastic"))
+    clock.run(until=clock.now + 1.0)           # ingest; cluster is full
+    assert queued.state == JobState.SCHED
+    mc.patch_size(1)
+    assert queued.spec.n_nodes == 1            # clamped while queued
+    _run_until(clock, lambda: job.state == JobState.INACTIVE
+               and queued.state == JobState.INACTIVE)
+    assert job.result == "completed"
+    assert queued.result == "completed"
+    assert ex.sessions[queued.jobid].step == 4
+
+
+# ---------------------------------------------------------------------------
+# Reconciler event plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_patch_size_publishes_resize_events():
+    clock = SimClock(seed=0)
+    fleet = ResourceGraph(n_pods=1, hosts_per_pod=4)
+    mc = FluxMiniCluster(clock, NetModel(), fleet,
+                         MiniClusterSpec(name="ev", size=2, max_size=4))
+    seen = []
+    mc.on_resize.append(lambda size, source: seen.append((size, source)))
+    mc.create()
+    mc.wait_ready()
+    mc.patch_size(4)
+    mc.patch_size(2, source="api")
+    assert seen == [(4, "user"), (2, "api")]
+    # the trace records the source alongside the size
+    sources = [kw.get("source") for _, _, kw in clock.events("patch_size")]
+    assert sources == ["user", "api"]
+
+
+def test_autoscaler_resize_reaches_running_session():
+    """Autoscaler-driven patch_size flows through the SAME event path:
+    the running elastic job grows and its resume is tagged."""
+    _need_8()
+    clock, mc, ex, job = _elastic_cluster(BASELINE, total_steps=16)
+    ses = ex.sessions[job.jobid]
+
+    class GrowPolicy:
+        def desired(self, mc):
+            return 4
+
+    auto = Autoscaler(clock, mc, GrowPolicy(), interval=15.0)
+    auto.start()
+    _run_until(clock, lambda: job.state == JobState.INACTIVE)
+    auto.stop()
+    assert job.result == "completed"
+    assert auto.decisions and auto.decisions[0][2] == 4
+    assert ses.resumes and ses.resumes[0]["transition"] == "2->4"
+    assert ses.resumes[0]["source"] == "autoscaler"
+
+
+# ---------------------------------------------------------------------------
+# Trainer-level remesh (the same path, no operator in the loop)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_ckpt", [True, False],
+                         ids=["ckpt", "in-memory"])
+def test_trainer_remesh_preserves_trajectory(use_ckpt, tmp_path):
+    _need_8()
+    from repro.train import Trainer
+    tcfg = TrainConfig(total_steps=9, warmup_steps=0)
+
+    def mesh(d, m):
+        return make_mesh((d, m), ("data", "model"),
+                         devices=jax.devices()[:d * m])
+
+    tr = Trainer(TINY, tcfg, SHAPE, mesh(1, 1), strategy=BASELINE,
+                 ckpt_dir=str(tmp_path / "ck") if use_ckpt else None)
+    tr.run(3, log_every=0)
+    tr.remesh(mesh(2, 4))
+    tr.run(3, log_every=0)
+    tr.remesh(mesh(1, 1))
+    hist = tr.run(3, log_every=0)
+    assert [h["step"] for h in hist] == list(range(9))
+
+    ref = Trainer(TINY, tcfg, SHAPE, mesh(1, 1), strategy=BASELINE)
+    ref_hist = ref.run(9, log_every=0)
+    np.testing.assert_allclose([h["loss"] for h in hist],
+                               [h["loss"] for h in ref_hist],
+                               rtol=2e-3, atol=1e-5)

@@ -171,3 +171,72 @@ def test_resolve_spec_divisibility(shape, axes):
         size = int(np.prod([mesh.shape[a] for a in axes_used]))
         assert dim % size == 0
     assert len(seen) == len(set(seen))
+
+
+# ---------------------------------------------------------------------------
+# Page allocator invariants (serving KV pool)
+# ---------------------------------------------------------------------------
+
+
+def _alloc_invariants(alloc, budgets):
+    """Conservation + null-page + uniqueness, checked after every op."""
+    from repro.serve.paging import NULL_PAGE
+    layout = alloc.layout
+    usable = layout.n_pages - 1
+    in_table = [int(p) for p in alloc.block_table.ravel()
+                if p != NULL_PAGE]
+    # pages are conserved: free list + in-use always covers the pool
+    assert len(alloc.free_pages) + len(in_table) == usable
+    # the null page is never allocated and never enters the free list
+    assert NULL_PAGE not in alloc.free_pages
+    assert NULL_PAGE not in in_table
+    # no physical page is owned twice (across slots or rows)
+    assert len(in_table) == len(set(in_table))
+    # free list + table is exactly the page id universe {1..n_pages-1}
+    assert sorted(alloc.free_pages + in_table) == list(range(1, usable + 1))
+    # reservations never go negative and never exceed what is free
+    assert alloc.reserved >= 0
+    assert alloc.reserved <= len(alloc.free_pages)
+    # live slots are exactly the non-free slots
+    assert len(budgets) + len(alloc.free_slots) == alloc.n_slots
+
+
+@FAST
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 63),
+                          st.integers(0, 63)),
+                min_size=1, max_size=60))
+def test_page_allocator_never_leaks(ops):
+    """Random admit/grow/evict sequences: pages are conserved, page 0
+    is never handed out, and draining every slot returns the pool to
+    pristine (nothing leaked)."""
+    from repro.dist.steps import PagedLayout
+    from repro.serve import PageAllocator
+
+    layout = PagedLayout(page_size=4, pages_per_slot=4, n_pages=11)
+    cap = layout.pages_per_slot * layout.page_size
+    alloc = PageAllocator(3, layout)
+    budgets = {}                       # slot -> admitted token budget
+    for op, a, b in ops:
+        if op == 0:                    # admit (length-aware)
+            prompt, new = 1 + a % cap, 1 + b % cap
+            if alloc.can_admit(prompt, new):
+                slot = alloc.admit(prompt, new)
+                assert slot not in budgets
+                budgets[slot] = prompt + new
+        elif op == 1 and budgets:      # grow one token (decode write)
+            slot = sorted(budgets)[a % len(budgets)]
+            if int(alloc.lengths[slot]) < budgets[slot]:
+                alloc.ensure_page(slot)
+                alloc.advance(slot)
+        elif op == 2 and budgets:      # evict
+            slot = sorted(budgets)[a % len(budgets)]
+            alloc.free(slot)
+            del budgets[slot]
+        _alloc_invariants(alloc, budgets)
+    for slot in list(budgets):
+        alloc.free(slot)
+        del budgets[slot]
+        _alloc_invariants(alloc, budgets)
+    assert alloc.pages_in_use() == 0
+    assert len(alloc.free_pages) == layout.n_pages - 1
+    assert sorted(alloc.free_slots) == list(range(alloc.n_slots))

@@ -241,6 +241,103 @@ def test_engine_temperature_threading_is_seeded():
         "temperature sampling should diverge from greedy"
 
 
+class _ContiguousSampler:
+    """Reference decoder for temperature>0: the contiguous-cache path
+    driven with the engine's exact PRNG key stream and slot layout.
+
+    ``sample_tokens`` draws Gumbel noise for the full (n_slots, vocab)
+    logits block from ONE key per tick, and each row's argmax depends
+    only on (key, row, that row's logits) — so a per-request contiguous
+    cache plus the right (key, slot row) reproduces the engine's stream
+    token for token, including requests admitted mid-decode.
+    """
+
+    def __init__(self, cfg, params, n_slots, seed, cap=32):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.cap = n_slots, cap
+        self.key = jax.random.PRNGKey(seed + 1)    # mirrors Engine._key
+        self.model = Model(cfg)
+        self.step_fn = jax.jit(self.model.decode_step)
+        self.live = {}                             # slot -> dict
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def prefill(self, req):
+        """One engine prefill tick for ``req`` (consumes one key)."""
+        k = self._split()
+        toks = np.zeros((1, self.cap), np.int32)
+        toks[0, :len(req.prompt)] = req.prompt
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)},
+            last_index=jnp.array([len(req.prompt) - 1]))
+        tok = int(np.asarray(sample_tokens(
+            logits, jnp.array([req.temperature]), k))[0])
+        self.live[req.slot] = {"cache": cache, "pos": len(req.prompt),
+                               "tok": tok, "temp": req.temperature}
+        return tok
+
+    def decode(self, slots):
+        """One engine decode tick for the active ``slots`` (one key)."""
+        k = self._split()
+        logits = jnp.zeros((self.n_slots, self.cfg.vocab_size))
+        temps = np.zeros((self.n_slots,), np.float32)
+        for s in slots:
+            st = self.live[s]
+            row, st["cache"] = self.step_fn(
+                self.params, st["cache"],
+                jnp.asarray([[st["tok"]]], jnp.int32), jnp.int32(st["pos"]))
+            st["pos"] += 1
+            logits = logits.at[s].set(row[0])
+            temps[s] = st["temp"]
+        toks = np.asarray(sample_tokens(logits, jnp.asarray(temps), k))
+        out = {}
+        for s in slots:
+            self.live[s]["tok"] = out[s] = int(toks[s])
+        return out
+
+
+def test_paged_matches_contiguous_at_temperature():
+    """ISSUE satellite: the paged==contiguous invariant extended past
+    greedy — identical PRNG key => token-for-token identical sampled
+    streams, with a second request admitted mid-decode."""
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    eng = Engine(TINY, ECFG, params=params, seed=3)
+    ref = _ContiguousSampler(TINY, params, ECFG.n_slots, seed=3)
+
+    r1 = eng.submit([1, 2, 3, 4, 5], max_new_tokens=8, temperature=0.9)
+    expect = {}
+
+    def tick():
+        """Advance engine + reference one tick in lockstep."""
+        admitted = eng.scheduler.admit()
+        if admitted:
+            for req in admitted:
+                eng._run_prefill(req)
+                expect[req.rid] = [ref.prefill(req)]
+        else:
+            active = sorted(s for s in eng.scheduler.running)
+            reqs = dict(eng.scheduler.running)
+            eng._run_decode()
+            for slot, tok in ref.decode(active).items():
+                expect[reqs[slot].rid].append(tok)
+
+    tick()                                    # prefill r1
+    tick(); tick()                            # r1 mid-decode
+    assert not r1.finished and len(r1.tokens) == 3
+    r2 = eng.submit([7, 8, 9], max_new_tokens=6, temperature=1.7)
+    while eng.scheduler.has_work:
+        tick()
+    assert r1.finished and r2.finished
+    assert r1.tokens == expect[r1.rid][:len(r1.tokens)]
+    assert r2.tokens == expect[r2.rid][:len(r2.tokens)]
+    # temperature actually bites: at least one stream left the greedy path
+    g1 = _contiguous_greedy(TINY, params, [1, 2, 3, 4, 5], 8)
+    g2 = _contiguous_greedy(TINY, params, [7, 8, 9], 6)
+    assert r1.tokens != g1 or r2.tokens != g2
+
+
 # ---------------------------------------------------------------------------
 # Streaming API
 # ---------------------------------------------------------------------------
