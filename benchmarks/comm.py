@@ -1,0 +1,159 @@
+"""Comm-layer benchmark: flat vs hierarchical vs hierarchical+int8.
+
+Runs the SAME tiny train job under three gradient-sync schedules on the
+forced-8-device ``(pod=2, data=2, model=2)`` mesh and records, per
+schedule, the measured step time and the topology model's estimate of
+bytes crossing the pod boundary (``comm.estimate_sync_bytes`` over the
+padded gradient payload).  The claim the JSON pins: the int8
+error-feedback schedule moves STRICTLY fewer estimated cross-pod bytes
+than the uncompressed hierarchical schedule, which in turn moves fewer
+than the topology-unaware flat ring.
+
+Standalone (the CI comm smoke):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.comm --smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_comm.json")
+
+STEPS = 5
+
+
+def _padded_grad_elems(cfg, data: int, block: int) -> int:
+    """Total synced gradient elements incl. the comm layer's padding
+    (each leaf pads to a multiple of data * block before the scatter)."""
+    import numpy as np
+
+    from repro.models import params as P
+    from repro.models.model import Model
+    defs = Model(cfg).param_defs()
+    unit = data * block
+    total = 0
+    for d in jax_leaves(defs):
+        n = int(np.prod(d.shape))
+        total += -(-n // unit) * unit
+    return total
+
+
+def jax_leaves(defs):
+    import jax
+
+    from repro.models.params import is_pdef
+    return jax.tree_util.tree_leaves(defs, is_leaf=is_pdef)
+
+
+def main(emit, smoke: bool = False):
+    import jax
+    if len(jax.devices()) < 8:
+        msg = (f"needs 8 devices, have {len(jax.devices())} (set "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        if smoke:
+            # the CI smoke exists to exercise this path: an environment
+            # that cannot run it must FAIL the step, not stay green
+            raise SystemExit(f"comm --smoke: {msg}")
+        emit("comm_skipped", 0.0, msg)
+        return
+
+    import numpy as np
+
+    from repro import comm
+    from repro.configs.base import (ModelConfig, ShardingStrategy,
+                                    TrainConfig, WorkloadShape)
+    from repro.dist import sharding as shd
+    from repro.dist import steps as dsteps
+    from repro.models import example_batch
+
+    cfg = ModelConfig(name="bench-comm", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256)
+    tcfg = TrainConfig(total_steps=64, warmup_steps=0)
+    shape = WorkloadShape("comm", "train", 32, 16)
+    mesh = shd.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = comm.CommTopology.from_mesh(mesh)
+    block = 256
+
+    schedules = {
+        "flat": ShardingStrategy(name="flat"),
+        "hierarchical": ShardingStrategy(
+            name="hier", hierarchical_collectives=True),
+        "hierarchical_int8": ShardingStrategy(
+            name="hier-int8", hierarchical_collectives=True,
+            compress_cross_pod=True, compress_pods=2,
+            compress_block=block),
+    }
+
+    n_elems = _padded_grad_elems(cfg, topo.data_size, block)
+    section = {"mesh": dict(mesh.shape), "grad_elems_padded": n_elems}
+    losses = {}
+    for name, strat in schedules.items():
+        jitted, sshard, bshard = dsteps.jit_train_step(
+            cfg, tcfg, strat, mesh, shape)
+        state = dsteps.init_train_state(cfg, tcfg, jax.random.PRNGKey(0),
+                                        strat)
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state, sshard)
+        batch = {k: jax.device_put(v, bshard[k])
+                 for k, v in example_batch(cfg, shape).items()}
+        state, metrics = jitted(state, batch)      # compile outside timing
+        jax.block_until_ready(metrics["loss"])
+        t0 = time.perf_counter()
+        for _ in range(STEPS):
+            state, metrics = jitted(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = (time.perf_counter() - t0) / STEPS
+        losses[name] = float(metrics["loss"])
+        est = comm.estimate_sync_bytes(
+            topo, n_elems, hierarchical=(name != "flat"),
+            compress=name.endswith("int8"), block=block)
+        section[name] = {
+            "step_time_s": dt,
+            "final_loss": losses[name],
+            "cross_pod_bytes": est["cross_pod_bytes"],
+            "cross_pod_per_link": est["cross_pod_per_link"],
+            "cross_pod_time_s": est["cross_pod_time_s"],
+        }
+        emit(f"comm_{name}_step", dt * 1e6,
+             f"{est['cross_pod_bytes'] / 1e6:.2f} MB est. cross-pod "
+             f"(per-link {est['cross_pod_per_link'] / 1e6:.2f} MB)")
+
+    # claim checks the acceptance pins
+    flat_b = section["flat"]["cross_pod_bytes"]
+    hier_b = section["hierarchical"]["cross_pod_bytes"]
+    int8_b = section["hierarchical_int8"]["cross_pod_bytes"]
+    section["claims"] = {
+        "hier_fewer_cross_pod_bytes_than_flat": hier_b < flat_b,
+        "int8_fewer_cross_pod_bytes_than_hier": int8_b < hier_b,
+        "losses_finite": all(np.isfinite(v) for v in losses.values()),
+    }
+    if not all(section["claims"].values()):
+        raise SystemExit(f"comm bench claim check failed: "
+                         f"{section['claims']}")
+
+    out = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            out = json.load(f)
+    out["comm"] = section
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("comm_json", 0.0,
+         f"wrote {OUT_JSON}; int8 saves "
+         f"{(1 - int8_b / hier_b) * 100:.0f}% cross-pod bytes vs hier, "
+         f"hier saves {(1 - hier_b / flat_b) * 100:.0f}% vs flat")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fail (not skip) without 8 devices (CI smoke)")
+    args = ap.parse_args()
+    main(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"),
+         smoke=args.smoke)

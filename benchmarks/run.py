@@ -14,12 +14,12 @@ def main() -> None:
     def emit(name, us, derived=""):
         print(f"{name},{us:.3f},{derived}")
 
-    from benchmarks import (creation, elasticity, kernelbench,
+    from benchmarks import (comm, creation, elasticity, kernelbench,
                             roofline_table, serving, throughput, workload)
     mods = [("fig2_creation", creation), ("fig3_fig5_workload", workload),
             ("etcd_throughput", throughput), ("elasticity", elasticity),
             ("kernels", kernelbench), ("roofline", roofline_table),
-            ("serving", serving)]
+            ("serving", serving), ("comm", comm)]
     for name, mod in mods:
         try:
             mod.main(emit)

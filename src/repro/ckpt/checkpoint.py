@@ -94,14 +94,24 @@ def _load_flat(path: str) -> Dict[str, np.ndarray]:
 
 
 def restore_state(template, path: str):
-    """Restore into the template tree (same structure; host arrays)."""
+    """Restore into the template tree (same structure; host arrays).
+
+    The comm layer's error-feedback residual (``comm/...``) is the one
+    subtree allowed to be MISSING from an older checkpoint: enabling
+    ``compress_cross_pod`` on a run checkpointed before the comm layer
+    existed starts the residual at zero (its init value) instead of
+    refusing to restore.  Every other leaf must be present.
+    """
     flat = _load_flat(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in paths:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                        for q in p)
-        arr = flat[key]
+        arr = flat.get(key)
+        if arr is None and key.startswith("comm/"):
+            arr = np.zeros(leaf.shape, dtype=leaf.dtype)
+        assert arr is not None, f"{key}: missing from checkpoint {path}"
         assert tuple(arr.shape) == tuple(leaf.shape), \
             f"{key}: ckpt {arr.shape} vs template {leaf.shape}"
         leaves.append(arr)

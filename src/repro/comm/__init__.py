@@ -1,0 +1,30 @@
+"""Topology-aware collective communication.
+
+The comm layer makes the ``ShardingStrategy.hierarchical_collectives``
+and ``compress_cross_pod`` flags REAL, driven by the same hierarchy the
+operator schedules:
+
+* ``topology``    — ``CommTopology.from_mesh`` derives axis tiers +
+                    a per-tier bandwidth model from mesh axis names;
+                    ``estimate_sync_bytes`` prices a sync against it;
+* ``collectives`` — ``sync_grads``: shard_map two-phase hierarchical
+                    gradient sync (reduce-scatter intra-pod, all-reduce
+                    shards cross-pod, all-gather back), with
+                    ``resolve_policy`` as the single warn-or-strict
+                    fallback gate;
+* ``compress``    — int8 per-block-scale quantization with
+                    error-feedback residuals on the cross-pod phase,
+                    the residual living in the train state so
+                    checkpoint/remesh carry it.
+"""
+from repro.comm import collectives, compress, topology  # noqa: F401
+from repro.comm.collectives import (  # noqa: F401
+    CommFallbackWarning, CommPolicy, CommTopologyError, degrade,
+    ef_shardings, grad_rules, resolve_policy, sync_grads,
+)
+from repro.comm.compress import (  # noqa: F401
+    EF_POD_AXIS, compress_payload, ef_defs,
+)
+from repro.comm.topology import (  # noqa: F401
+    CommTopology, estimate_sync_bytes, payload_bytes,
+)

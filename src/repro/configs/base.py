@@ -267,10 +267,25 @@ class ShardingStrategy:
     expert_parallel: bool = True
     # decode-time KV cache sequence sharding axis ("model" | "none")
     kv_seq_axis: str = "model"
-    # hierarchical two-phase collective schedule over (pod, data)
+    # hierarchical two-phase collective schedule over (pod, data):
+    # reduce-scatter inside each pod over the fast data axis, all-reduce
+    # the shards across pods over the slow pod axis, all-gather back
+    # (see repro/comm/collectives.py)
     hierarchical_collectives: bool = False
     # int8 error-feedback compression on cross-pod gradient reduction
     compress_cross_pod: bool = False
+    # logical pod count the compression schema is sized for: the
+    # error-feedback residual carries one row per pod payload, and its
+    # SHAPE must not depend on the live mesh (elastic remesh reshards
+    # the residual with the rest of the train state, so the schema is a
+    # function of the strategy alone; meshes whose pod tier differs
+    # sync uncompressed with a warning)
+    compress_pods: int = 2
+    # contiguous fp32 elements per int8 scale (quantization block)
+    compress_block: int = 256
+    # error instead of falling back to flat sync when the mesh cannot
+    # honor the requested comm schedule (no pod tier, pod mismatch)
+    comm_strict: bool = False
     # tensor parallelism over the model axis; when False the model axis
     # becomes a second FSDP/data axis (pure ZeRO-3 over all 256 chips)
     tensor_parallel: bool = True

@@ -164,7 +164,7 @@ class SubmeshExecutor:
         jitted, sshard, bshard = dsteps.jit_train_step(
             cfg, tcfg, strategy, mesh, shape)
         state = dsteps.init_train_state(cfg, tcfg,
-                                        jax.random.PRNGKey(0))
+                                        jax.random.PRNGKey(0), strategy)
         state = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), state, sshard)
         batch = {k: jax.device_put(v, bshard[k])
@@ -374,7 +374,8 @@ class ElasticTrainExecutor(SubmeshExecutor):
             # state belongs to devices the job may no longer hold, so
             # restore the latest COMMITTED checkpoint resharded onto
             # the new mesh — params and opt state both re-laid-out
-            template = dsteps.abstract_train_state(ses.cfg, ses.tcfg)
+            template = dsteps.abstract_train_state(ses.cfg, ses.tcfg,
+                                                   strategy)
             ses.state, step = ses.ckpt.restore_latest(template, sshard)
             ses.step = int(step)
             # steps past the checkpoint re-run after restore: drop them
@@ -395,7 +396,8 @@ class ElasticTrainExecutor(SubmeshExecutor):
                 ses.t_resize_sim = None
         elif ses.state is None:
             state = dsteps.init_train_state(ses.cfg, ses.tcfg,
-                                            jax.random.PRNGKey(ses.seed))
+                                            jax.random.PRNGKey(ses.seed),
+                                            strategy)
             ses.state = jax.tree_util.tree_map(
                 lambda x, s: jax.device_put(x, s), state, sshard)
         else:
@@ -444,7 +446,7 @@ class ElasticTrainExecutor(SubmeshExecutor):
         ses.ckpt.save(ses.state, ses.step,
                       meta=self._meta(ses, ses.pending_source))
         graph.free(job.jobid)
-        rset = graph.match(want, policy=self.mc.instance.match_policy)
+        rset = self.mc.instance.match_pod_local(want)
         assert rset is not None, "remesh match must succeed (checked above)"
         graph.alloc(rset, job.jobid)
         job.allocation = rset

@@ -65,12 +65,24 @@ class FluxInstance:
         self.clock.call_in(self.net.sched_cycle, self.schedule_loop)
 
     # -- scheduling (Fluxion) -----------------------------------------------
+    def match_pod_local(self, n_nodes: int) -> Optional[ResourceSet]:
+        """Pod-locality first (Fluxion's hierarchy heuristic, applied):
+        a job that FITS inside one pod should never be scattered across
+        the slow cross-pod links just because lower host ids were free
+        elsewhere — cross-pod bandwidth is the contended resource.
+        Falls back to a cross-pod placement only when no single pod can
+        hold the job."""
+        rset = self.graph.match(n_nodes, policy=self.match_policy,
+                                same_pod=True)
+        if rset is None:
+            rset = self.graph.match(n_nodes, policy=self.match_policy)
+        return rset
+
     def schedule_loop(self):
         if self._paused:
             return
         for job in self.queue.schedulable():
-            rset = self.graph.match(job.spec.n_nodes,
-                                    policy=self.match_policy)
+            rset = self.match_pod_local(job.spec.n_nodes)
             if rset is None:
                 if job.spec.burstable:
                     # offer to the bursting plugins; first taker wins

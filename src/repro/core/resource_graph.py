@@ -29,10 +29,18 @@ class Host:
 
 @dataclass
 class ResourceSet:
-    """An exclusive allocation: host ids (and implied chips)."""
+    """An exclusive allocation: host ids (and implied chips).
+
+    ``pods`` carries the pod of each host (parallel to ``hosts``) so
+    the execution layer can preserve pod locality: ``submesh_for``
+    raises a ``(pod, data, model)`` mesh when the allocation spans
+    pods instead of flattening the hierarchy away.  Empty for legacy
+    call sites that construct allocations by hand.
+    """
 
     hosts: Tuple[int, ...]
     chips_per_host: int
+    pods: Tuple[int, ...] = ()
 
     @property
     def n_hosts(self) -> int:
@@ -109,8 +117,13 @@ class ResourceGraph:
             hosts = sorted(free, key=lambda h: h.hid)[:n_hosts]
         if len(hosts) < n_hosts:
             return None
+        # pod-major host order, whatever policy picked the set: the
+        # submesh bridge raises a (pod, data, model) mesh only over
+        # pod-contiguous allocations (best_fit visits pods by fill)
+        hosts.sort(key=lambda h: (h.pod, h.hid))
         return ResourceSet(tuple(h.hid for h in hosts),
-                           self.chips_per_host)
+                           self.chips_per_host,
+                           pods=tuple(h.pod for h in hosts))
 
     def alloc(self, rset: ResourceSet, jobid: int):
         for hid in rset.hosts:

@@ -179,27 +179,59 @@ def batch_sharding(mesh: Mesh, ndim: int, global_batch: int,
 # --------------------------------------------------------------------------
 
 
+def _pod_tier(rset) -> Optional[Tuple[int, int]]:
+    """(n_pods, hosts_per_pod) when the allocation spans pods evenly.
+
+    The pod tier only rises when it is well-formed: ≥ 2 distinct pods,
+    the same host count in each, hosts grouped pod-contiguously (the
+    graph numbers hosts pod-major, and matchers return sorted ids).
+    Anything else — legacy ResourceSets without pod info, ragged spans
+    — flattens to the classic (data, model) mesh.
+    """
+    pods = tuple(getattr(rset, "pods", ()) or ())
+    if len(pods) != rset.n_hosts or len(set(pods)) < 2:
+        return None
+    if list(pods) != sorted(pods):
+        return None
+    counts = {p: pods.count(p) for p in set(pods)}
+    if len(set(counts.values())) != 1:
+        return None
+    return len(counts), next(iter(counts.values()))
+
+
 def submesh_for(rset, devices=None) -> Mesh:
     """Map a Flux ``ResourceSet`` allocation onto a JAX device sub-mesh.
 
     The allocation's chip ids index the process's device list directly
     — the resource graph drives physical placement.  Hosts become the
-    ``data`` axis, chips-per-host the ``model`` axis.  When the
-    allocation names more chips than this process has (orchestration
-    benches simulate fleets far larger than the dev box), the mesh
-    degrades to the largest (hosts, chips) grid that fits, down to a
-    single device.
+    ``data`` axis, chips-per-host the ``model`` axis; an allocation
+    whose hosts span pods (the ``Host.pod`` field the graph carries)
+    yields a ``(pod, data, model)`` mesh instead of flattening pod
+    locality away, so the comm layer can schedule around the slow
+    cross-pod links.  When the allocation names more chips than this
+    process has (orchestration benches simulate fleets far larger than
+    the dev box), the mesh degrades to the largest (hosts, chips) grid
+    that fits, down to a single device.
     """
     devices = list(jax.devices() if devices is None else devices)
     nd = len(devices)
     cids = rset.chip_ids()
     if cids and len(cids) <= nd and max(cids) < nd:
         devs = [devices[c] for c in cids]
-        shape = (rset.n_hosts, rset.chips_per_host)
+        tier = _pod_tier(rset)
+        if tier is not None:
+            n_pods, per_pod = tier
+            shape: Tuple[int, ...] = (n_pods, per_pod,
+                                      rset.chips_per_host)
+            axes: Tuple[str, ...] = ("pod", "data", "model")
+        else:
+            shape = (rset.n_hosts, rset.chips_per_host)
+            axes = ("data", "model")
     else:
         hosts = max(1, min(rset.n_hosts, nd))
         chips = max(1, min(rset.chips_per_host, nd // hosts))
         devs = devices[:hosts * chips]
         shape = (hosts, chips)
+        axes = ("data", "model")
     arr = np.asarray(devs, dtype=object).reshape(shape)
-    return Mesh(arr, ("data", "model"))
+    return Mesh(arr, axes)

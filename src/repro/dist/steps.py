@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import comm
 from repro.configs.base import (ModelConfig, ShardingStrategy, TrainConfig,
                                 WorkloadShape)
 from repro.dist import sharding as shd
@@ -39,42 +40,62 @@ METRIC_KEYS = ("loss", "xent", "moe_aux")
 # --------------------------------------------------------------------------
 
 
-def train_state_defs(cfg: ModelConfig) -> Dict:
+def train_state_defs(cfg: ModelConfig,
+                     strategy: Optional[ShardingStrategy] = None) -> Dict:
+    """State schema.  A strategy with ``compress_cross_pod`` adds the
+    comm layer's error-feedback residual under ``comm/ef`` — schema'd
+    by (cfg, strategy) alone, never by the live mesh, so checkpoints
+    reshard across elastic resizes exactly like params and opt state."""
     model_defs = Model(cfg).param_defs()
-    return {"params": model_defs, "opt": opt_state_defs(cfg, model_defs)}
+    defs = {"params": model_defs, "opt": opt_state_defs(cfg, model_defs)}
+    if strategy is not None and strategy.compress_cross_pod:
+        defs["comm"] = {"ef": comm.ef_defs(model_defs, strategy)}
+    return defs
 
 
-def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig) -> Dict:
-    defs = train_state_defs(cfg)
-    return {
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig,
+                         strategy: Optional[ShardingStrategy] = None) -> Dict:
+    defs = train_state_defs(cfg, strategy)
+    out = {
         "params": P.abstract_params(defs["params"],
                                     jnp.dtype(tcfg.param_dtype)),
         "opt": P.abstract_params(defs["opt"]),
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
+    if "comm" in defs:
+        out["comm"] = P.abstract_params(defs["comm"])
+    return out
 
 
-def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> Dict:
-    defs = train_state_defs(cfg)
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key,
+                     strategy: Optional[ShardingStrategy] = None) -> Dict:
+    defs = train_state_defs(cfg, strategy)
     kp, ko = jax.random.split(key)
-    return {
+    out = {
         "params": P.init_params(defs["params"], kp,
                                 jnp.dtype(tcfg.param_dtype)),
         "opt": P.init_params(defs["opt"], ko),
         "step": jnp.zeros((), jnp.int32),
     }
+    if "comm" in defs:
+        out["comm"] = P.init_params(defs["comm"], ko)   # zeros
+    return out
 
 
 def train_state_shardings(cfg: ModelConfig, strategy: ShardingStrategy,
                           mesh) -> Dict:
-    defs = train_state_defs(cfg)
-    return {
+    defs = train_state_defs(cfg, strategy)
+    out = {
         "params": shd.tree_shardings(defs["params"], mesh,
                                      shd.param_rules(strategy)),
         "opt": shd.tree_shardings(defs["opt"], mesh,
                                   shd.opt_rules(strategy)),
         "step": shd.replicated(mesh),
     }
+    if "comm" in defs:
+        out["comm"] = shd.tree_shardings(defs["comm"], mesh,
+                                         comm.grad_rules(strategy))
+    return out
 
 
 def batch_shardings(cfg: ModelConfig, shape: WorkloadShape,
@@ -96,11 +117,30 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     step_fn(state, batch) -> (new_state, metrics); metrics are scalar
     (loss, xent, moe_aux, grad_norm, lr).  Microbatched gradient
     accumulation when ``tcfg.grad_accum > 1``.
+
+    When the strategy asks for hierarchical collectives and the mesh
+    has a pod tier (``comm.resolve_policy``), the gradient sync routes
+    through ``comm.sync_grads``: the microbatch loop keeps per-chunk
+    gradients STACKED (one chunk per data-parallel shard, pod-major)
+    instead of letting the partitioner emit a flat all-reduce, and the
+    two-phase schedule — plus optional int8 error-feedback compression
+    on the cross-pod hop — reduces them to the same mean.  Otherwise
+    the flat path below runs unchanged (``resolve_policy`` already
+    warned, once, if the strategy asked for more than the mesh offers).
     """
     model = Model(cfg)
     update = make_optimizer(cfg, tcfg)
     cdt = jnp.dtype(tcfg.compute_dtype)
     ga = max(tcfg.grad_accum, 1)
+
+    policy = comm.resolve_policy(strategy, mesh)
+    dp_world = shd.axis_size(mesh, shd.data_axes(mesh))
+    n_chunks = ga * max(dp_world, 1)
+    if policy.hierarchical and shape.global_batch % n_chunks != 0:
+        comm.degrade(strategy, f"global batch {shape.global_batch} does "
+                     f"not divide into {n_chunks} chunks "
+                     f"(grad_accum={ga} x dp={dp_world})")
+        policy = comm.CommPolicy()
 
     def loss_fn(p, mb):
         loss, metrics = model.loss(p, mb, remat=tcfg.remat,
@@ -108,10 +148,67 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         return loss, {k: metrics[k].astype(jnp.float32)
                       for k in METRIC_KEYS}
 
+    def hier_grads(state, batch):
+        """Stacked-chunk gradients routed through comm.sync_grads.
+
+        vmap over the dp chunk dim keeps every (pod, data) slot's
+        backward concurrent (a scan here would serialize dp_world
+        parallel shards); grad_accum microbatches accumulate into ONE
+        dp-stacked buffer in the scan carry, so memory stays at a
+        single gradient copy per device like the flat path.  Chunks
+        nest (accum, pod, data)-major, so the row set each POD owns is
+        invariant under data-tier resizes — elastic remesh cannot
+        perturb what the compressor sees.
+        """
+        params = state["params"]
+
+        def chunk_grad(p, mb):
+            return jax.value_and_grad(loss_fn, has_aux=True)(p, mb)
+
+        def dp_grads(mbs):
+            (_, m), g = jax.vmap(chunk_grad, in_axes=(None, 0))(params,
+                                                                mbs)
+            return g, m
+
+        n_dp = max(dp_world, 1)
+        micro = jax.tree_util.tree_map(
+            lambda a: a.reshape((ga, n_dp, a.shape[0] // n_chunks)
+                                + a.shape[1:]), batch)
+        if ga == 1:
+            stacked, ms = dp_grads(jax.tree_util.tree_map(
+                lambda a: a[0], micro))
+        else:
+            def body(carry, mbs):
+                gacc, macc = carry
+                g, m = dp_grads(mbs)
+                gacc = jax.tree_util.tree_map(
+                    lambda x, y: x + y.astype(jnp.float32), gacc, g)
+                macc = {k: macc[k] + m[k] for k in METRIC_KEYS}
+                return (gacc, macc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros((n_dp,) + p.shape, jnp.float32),
+                params)
+            m0 = {k: jnp.zeros((n_dp,), jnp.float32)
+                  for k in METRIC_KEYS}
+            (gsum, msum), _ = jax.lax.scan(body, (g0, m0), micro)
+            stacked = jax.tree_util.tree_map(lambda g: g / ga, gsum)
+            ms = {k: v / ga for k, v in msum.items()}
+        residual = (state["comm"]["ef"]
+                    if policy.compress and "comm" in state else None)
+        grads, new_ef = comm.sync_grads(
+            stacked, model.param_defs(), mesh, policy, strategy,
+            residual=residual)
+        metrics = {k: jnp.mean(ms[k]) for k in METRIC_KEYS}
+        return grads, metrics, new_ef
+
     def step_fn(state, batch):
         with activation_sharding(mesh, strategy):
             params = state["params"]
-            if ga == 1:
+            new_ef = None
+            if policy.hierarchical:
+                grads, metrics, new_ef = hier_grads(state, batch)
+            elif ga == 1:
                 (_, metrics), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, batch)
             else:
@@ -138,6 +235,12 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                                            state["step"])
             new_state = {"params": new_p, "opt": new_opt,
                          "step": state["step"] + 1}
+            if "comm" in state:
+                # the residual is train state even while a pod-less
+                # mesh syncs flat: it must survive to the next mesh
+                # that CAN compress (elastic remesh round-trip)
+                new_state["comm"] = ({"ef": new_ef} if new_ef is not None
+                                     else state["comm"])
             metrics = dict(metrics, grad_norm=stats["grad_norm"],
                            lr=stats["lr"])
         return new_state, metrics

@@ -11,6 +11,7 @@ import jax
 
 from repro.kernels.decode_attention import ref as _dec_ref
 from repro.kernels.flash_attention import ref as _fa_ref
+from repro.kernels.quantize import ref as _q_ref
 from repro.kernels.rmsnorm import ref as _rn_ref
 
 
@@ -54,6 +55,26 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
             interpret=(impl == "interpret"))
     return _dec_ref.paged_decode_ref(q, k_pages, v_pages, block_table,
                                      lengths, scale=scale)
+
+
+def quantize_int8(x, *, impl=None):
+    """Block-scaled symmetric int8: x (n_blocks, block) f32 ->
+    (codes int8, scales f32 (n_blocks,)).  The cross-pod gradient
+    compression primitive (see repro/comm/compress.py)."""
+    impl = impl or _auto()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.quantize import ops as _q_ops
+        return _q_ops.quantize_int8(x, interpret=(impl == "interpret"))
+    return _q_ref.quantize_int8_ref(x, block=x.shape[-1])
+
+
+def dequantize_int8(codes, scales, *, impl=None):
+    impl = impl or _auto()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.quantize import ops as _q_ops
+        return _q_ops.dequantize_int8(codes, scales,
+                                      interpret=(impl == "interpret"))
+    return _q_ref.dequantize_int8_ref(codes, scales)
 
 
 def rmsnorm(x, weight, *, eps=1e-5, impl=None):

@@ -1,0 +1,78 @@
+"""Pallas TPU block-scaled int8 quantize/dequantize (row-blocked).
+
+One quantization block per row: the grid walks row chunks, each program
+loads (rows, block) into VMEM, reduces the per-row absmax on the VPU
+and emits int8 codes plus one fp32 scale per row in a single pass —
+one HBM read per element, no intermediate fp32 round-trip (XLA's
+unfused chain materializes |x|, the scale broadcast and the rounded
+fp32 before the int8 cast).
+
+ROW_BLOCK is 32: the int8 OUTPUT tile is (32, 128), the tighter of the
+two dtype tilings in play (fp32 input tiles at (8, 128)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 32
+QMAX = 127.0
+
+
+def _quant_kernel(x_ref, codes_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / QMAX, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -QMAX, QMAX)
+    codes_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _dequant_kernel(codes_ref, scale_ref, o_ref):
+    o_ref[...] = (codes_ref[...].astype(jnp.float32)
+                  * scale_ref[...].astype(jnp.float32)[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_int8_kernel(x, *, interpret=False):
+    """x: (n_blocks, block) f32 -> (codes int8, scales f32 (n_blocks,))."""
+    rows, block = x.shape
+    blk = min(ROW_BLOCK, rows)
+    pad = (-rows) % blk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    codes, scales = pl.pallas_call(
+        _quant_kernel,
+        grid=(x.shape[0] // blk,),
+        in_specs=[pl.BlockSpec((blk, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((blk, block), lambda i: (i, 0)),
+                   pl.BlockSpec((blk,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((x.shape[0],), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return codes[:rows], scales[:rows]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_int8_kernel(codes, scales, *, interpret=False):
+    """(codes int8 (n_blocks, block), scales (n_blocks,)) -> f32."""
+    rows, block = codes.shape
+    blk = min(ROW_BLOCK, rows)
+    pad = (-rows) % blk
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        scales = jnp.pad(scales, (0, pad))
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(codes.shape[0] // blk,),
+        in_specs=[pl.BlockSpec((blk, block), lambda i: (i, 0)),
+                  pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(codes.shape, jnp.float32),
+        interpret=interpret,
+    )(codes, scales)
+    return out[:rows]

@@ -1,0 +1,13 @@
+"""jit'd wrappers for the block-scaled int8 quantize kernels."""
+from __future__ import annotations
+
+from repro.kernels.quantize.kernel import (dequantize_int8_kernel,
+                                           quantize_int8_kernel)
+
+
+def quantize_int8(x, *, interpret=False):
+    return quantize_int8_kernel(x, interpret=interpret)
+
+
+def dequantize_int8(codes, scales, *, interpret=False):
+    return dequantize_int8_kernel(codes, scales, interpret=interpret)

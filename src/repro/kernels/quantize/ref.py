@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for block-scaled int8 quantize/dequantize.
+
+The compression primitive behind ``repro.comm.compress``: symmetric
+per-block int8 with one fp32 scale per BLOCK contiguous elements.
+Zero blocks quantize to scale 1.0 (codes all zero), so padding regions
+round-trip exactly and error-feedback residuals stay zero there.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+def quantize_int8_ref(x, *, block: int = 256):
+    """x: (n_blocks, block) f32 -> (codes int8, scales f32 (n_blocks,))."""
+    assert x.ndim == 2 and x.shape[1] == block, x.shape
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scales = jnp.where(amax > 0.0, amax / QMAX, 1.0)
+    codes = jnp.clip(jnp.round(xf / scales[:, None]), -QMAX, QMAX)
+    return codes.astype(jnp.int8), scales
+
+
+def dequantize_int8_ref(codes, scales):
+    """(codes int8 (n_blocks, block), scales (n_blocks,)) -> f32."""
+    return codes.astype(jnp.float32) * scales[:, None].astype(jnp.float32)

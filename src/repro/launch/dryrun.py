@@ -70,7 +70,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         tcfg = _train_cfg(cfg, train_overrides)
         step, sshard, bshard = dsteps.build_train_step(
             cfg, tcfg, strategy, mesh, shape)
-        state_abs = dsteps.abstract_train_state(cfg, tcfg)
+        state_abs = dsteps.abstract_train_state(cfg, tcfg, strategy)
         batch_abs = input_specs(cfg, shape)
         jitted = jax.jit(step,
                          in_shardings=(sshard, bshard),

@@ -22,7 +22,10 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return make_mesh((data, model), ("data", "model"))
 
 
-# TPU v5e hardware constants (roofline targets)
+# TPU v5e hardware constants (roofline targets).  Link bandwidths live
+# with the comm layer's tier model (repro/comm/topology.py) so the
+# roofline and the collective scheduler price the same hardware.
+from repro.comm.topology import DCN_BW, ICI_BW  # noqa: E402,F401
+
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip
-ICI_BW = 50e9                     # bytes/s per link

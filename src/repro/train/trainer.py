@@ -42,7 +42,8 @@ class Trainer:
     # ------------------------------------------------------------------
     def init_or_resume(self):
         if self.ckpt is not None:
-            template = dsteps.abstract_train_state(self.cfg, self.tcfg)
+            template = dsteps.abstract_train_state(self.cfg, self.tcfg,
+                                                   self.strategy)
             restored, step = self.ckpt.restore_latest(
                 template, self.state_shardings)
             if restored is not None:
@@ -51,7 +52,8 @@ class Trainer:
                 return "resumed"
         with self.mesh:
             state = dsteps.init_train_state(
-                self.cfg, self.tcfg, jax.random.PRNGKey(self.seed))
+                self.cfg, self.tcfg, jax.random.PRNGKey(self.seed),
+                self.strategy)
             self.state = jax.tree_util.tree_map(
                 lambda x, s: jax.device_put(x, s), state,
                 self.state_shardings)
@@ -75,7 +77,8 @@ class Trainer:
         self.state_shardings = sshard
         self.batch_shardings = bshard
         if self.state is not None:
-            template = dsteps.abstract_train_state(self.cfg, self.tcfg)
+            template = dsteps.abstract_train_state(self.cfg, self.tcfg,
+                                                   self.strategy)
             if self.ckpt is not None:
                 self.ckpt.save(self.state, self.start_step)
                 self.ckpt.wait()
