@@ -95,17 +95,20 @@ def elastic_remesh(emit, out, strict: bool = False):
     tiny = ModelConfig(name="bench-elastic", family="dense", n_layers=2,
                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
                        vocab_size=256)
+    from repro.spec import ResourceSpec, TrainSpec, WorkloadSpec
     clock = SimClock(seed=2)
     net = NetModel()
     fleet = ResourceGraph(n_pods=1, hosts_per_pod=4, chips_per_host=2)
     mc = FluxMiniCluster(clock, net, fleet,
                          MiniClusterSpec(name="remesh", size=2, max_size=4))
-    ex = mc.attach_elastic_executor(cfg=tiny, total_steps=18,
-                                    sim_step_time=20.0, global_batch=8,
-                                    seq_len=32)
     mc.create(); mc.wait_ready()
-    job = mc.instance.submit(JobSpec(n_nodes=2, walltime=1e9,
-                                     command="bench-elastic"))
+    handle = mc.apply(
+        WorkloadSpec(kind="train", arch="bench-elastic",
+                     resources=ResourceSpec(n_nodes=2, elastic=True),
+                     train=TrainSpec(total_steps=18, global_batch=8,
+                                     seq_len=32)),
+        cfg=tiny, executor_opts=dict(sim_step_time=20.0))
+    ex, job = handle.executor, handle.job
     # every wait is time-bounded: a missed condition (heartbeats keep
     # the sim queue alive forever) must fail the assert, never hang
     clock.run(until=clock.now + 50_000,
@@ -139,6 +142,76 @@ def elastic_remesh(emit, out, strict: bool = False):
              f"-> mesh {tuple(r['mesh_shape'])}")
 
 
+def serve_remesh(emit, out, strict: bool = False):
+    """Elastic SERVING: a continuous-batching engine rides a grow 2->4
+    while requests are in flight — in-flight slots are parked in the
+    graceful window, the engine is rebuilt on the grown sub-mesh, and
+    decode resumes token-for-token.  Records TTFT, tokens/s and the
+    rebuild/resume costs of the transition."""
+    import time as _time
+
+    import jax
+    if len(jax.devices()) < 8:
+        msg = (f"needs 8 devices, have {len(jax.devices())} (set "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        if strict:
+            raise SystemExit(f"elasticity --smoke (serve): {msg}")
+        emit("serve_remesh_skipped", 0.0, msg)
+        return
+    from repro.configs.base import ModelConfig
+    from repro.spec import ResourceSpec, ServeSpec, WorkloadSpec
+    tiny = ModelConfig(name="bench-serve", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab_size=256)
+    clock = SimClock(seed=3)
+    fleet = ResourceGraph(n_pods=1, hosts_per_pod=4, chips_per_host=2)
+    mc = FluxMiniCluster(clock, NetModel(), fleet,
+                         MiniClusterSpec(name="srv", size=2, max_size=4))
+    mc.create(); mc.wait_ready()
+    gen = 24
+    handle = mc.apply(
+        WorkloadSpec(kind="serve", arch="bench-serve",
+                     resources=ResourceSpec(n_nodes=2, elastic=True),
+                     serve=ServeSpec(n_slots=4, page_size=8,
+                                     max_prompt_len=8, max_seq_len=40,
+                                     max_new=gen, n_requests=3)),
+        cfg=tiny, executor_opts=dict(sim_tick_time=40.0))
+    ex, job = handle.executor, handle.job
+    t_wall0 = _time.perf_counter()
+    clock.run(until=clock.now + 50_000,
+              stop_when=lambda: job.jobid in ex.sessions
+              and ex.sessions[job.jobid].ticks >= 4)
+    ses = ex.sessions[job.jobid]
+    mc.patch_size(4)                                 # grow mid-decode
+    # one request arrives DURING the resize window (parked + re-admitted)
+    handle.submit_request([3, 1, 4, 1, 5], max_new_tokens=gen)
+    clock.run(until=clock.now + 100_000,
+              stop_when=lambda: job.state == JobState.INACTIVE)
+    wall = _time.perf_counter() - t_wall0
+    assert job.result == "completed", handle.status()
+    rec = ex.ran[job.jobid]
+    assert rec["n_resumes"] == 1, rec["n_resumes"]
+    assert rec["mesh_shape"] == (4, 2), rec["mesh_shape"]
+    res = rec["resumes"][0]
+    out["serve_remesh"] = {
+        "transition": res["transition"],
+        "n_requests": rec["n_requests"],
+        "n_tokens": rec["n_tokens"],
+        "tokens_per_s_wall": rec["n_tokens"] / max(wall, 1e-9),
+        "ttft_mean_s": rec["ttft_mean_s"],
+        "rebuild_s": res["rebuild_s"],
+        "time_to_resume_s": res["time_to_resume_s"],
+        "sim_resume_gap_s": res["sim_resume_gap_s"],
+        "final_mesh": list(rec["mesh_shape"]),
+    }
+    emit("serve_remesh_resume_2->4_s", res["time_to_resume_s"] * 1e6,
+         f"engine rebuild {res['rebuild_s']*1e3:.0f}ms + first chunk "
+         f"{res['first_chunk_s']*1e3:.0f}ms at tick {res['tick']}")
+    emit("serve_remesh_ttft_mean_s", rec["ttft_mean_s"] * 1e6,
+         f"{rec['n_requests']} requests, {rec['n_tokens']} tokens, "
+         f"{out['serve_remesh']['tokens_per_s_wall']:.0f} tok/s wall")
+
+
 def main(emit, smoke: bool = False):
     # read-modify-write: each section overwrites ONLY its own keys, so
     # a partial run (--smoke, or a device-starved skip) never drops the
@@ -150,6 +223,7 @@ def main(emit, smoke: bool = False):
     if not smoke:
         control_plane(emit, out)
     elastic_remesh(emit, out, strict=smoke)
+    serve_remesh(emit, out, strict=smoke)
     with open(OUT_JSON, "w") as f:
         json.dump(out, f, indent=2)
     emit("elasticity_json", 0.0, f"wrote {OUT_JSON}")

@@ -11,9 +11,10 @@ import jax
 
 from repro.configs import TrainConfig, registry
 from repro.configs.base import WorkloadShape
-from repro.core import (FluxMiniCluster, JobSpec, MiniClusterSpec, NetModel,
+from repro.core import (FluxMiniCluster, MiniClusterSpec, NetModel,
                         ResourceGraph, SimClock)
 from repro.launch.mesh import make_local_mesh
+from repro.spec import ResourceSpec, TrainSpec, WorkloadSpec
 from repro.train import Trainer
 
 
@@ -31,11 +32,15 @@ def main():
                          MiniClusterSpec(name="train", size=4, max_size=8))
     mc.create()
     print(f"cluster ready in {mc.wait_ready():.1f}s")
-    job = mc.instance.submit(JobSpec(n_nodes=4, walltime=1e9,
-                                     command=args.arch))
+    h = mc.apply(WorkloadSpec(
+        kind="train", arch=args.arch, name="elastic-demo",
+        resources=ResourceSpec(n_nodes=4),
+        train=TrainSpec(total_steps=1, seq_len=16)))
+    job = h.job
     clock.run(until=clock.now + 5)
     assert job.allocation is not None, "job must hold an allocation"
-    print(f"job {job.jobid} allocated hosts {list(job.allocation.hosts)}")
+    print(f"workload {job.jobid} ({h.phase}) allocated hosts "
+          f"{list(job.allocation.hosts)}")
 
     # --- data plane: the allocated job runs the Trainer ---
     cfg = registry.smoke(args.arch)

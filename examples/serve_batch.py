@@ -1,9 +1,8 @@
-"""Serve a small model with continuously batched requests.
-
-A thin client of ``repro.serve.Engine`` (the one sharded-step API every
-surface consumes): requests are submitted at different times, share the
-paged KV cache, and stream tokens as the engine interleaves prefill of
-new arrivals with decode of in-flight slots.
+"""Serve a small model with continuously batched requests UNDER the
+operator: a declarative serve WorkloadSpec is applied to a MiniCluster,
+the reconciler binds an elastic serving engine to the job's allocation,
+and requests stream through the handle — half of them submitted
+mid-decode (the continuous-batching path: no restart, no recompile).
 
     PYTHONPATH=src python examples/serve_batch.py [--arch yi-6b]
 """
@@ -13,8 +12,10 @@ import time
 import numpy as np
 
 from repro.configs import registry
-from repro.serve import Engine, EngineConfig
+from repro.core import (FluxMiniCluster, JobState, MiniClusterSpec,
+                        NetModel, ResourceGraph, SimClock)
 from repro.serve.paging import round_up
+from repro.spec import ResourceSpec, ServeSpec, WorkloadSpec
 
 
 def main():
@@ -26,40 +27,51 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
-    cfg = registry.smoke(args.arch)
-    page = 8
-    ecfg = EngineConfig(
-        n_slots=args.batch, page_size=page,
-        max_prompt_len=round_up(args.prompt_len, page),
-        max_seq_len=round_up(args.prompt_len + args.gen, page))
-    t0 = time.perf_counter()
-    eng = Engine(cfg, ecfg)
-    rng = np.random.default_rng(0)
+    clock = SimClock(seed=0)
+    fleet = ResourceGraph(n_pods=1, hosts_per_pod=2, chips_per_host=4)
+    mc = FluxMiniCluster(clock, NetModel(), fleet,
+                         MiniClusterSpec(name="serve", size=2))
+    mc.create()
+    mc.wait_ready()
 
-    # stagger arrivals: half the requests are admitted mid-decode, which
-    # is the continuous-batching path (no restart, no recompile)
-    first = [eng.submit(rng.integers(0, cfg.vocab_size,
-                                     args.prompt_len).tolist(),
-                        max_new_tokens=args.gen,
-                        temperature=args.temperature)
-             for _ in range(max(args.batch // 2, 1))]
-    for _ in range(2):
-        eng.step()
-    late = [eng.submit(rng.integers(0, cfg.vocab_size,
-                                    args.prompt_len).tolist(),
-                       max_new_tokens=args.gen,
-                       temperature=args.temperature)
-            for _ in range(args.batch - len(first))]
-    eng.run()
+    page = 8
+    spec = WorkloadSpec(
+        kind="serve", arch=args.arch, name="serve-batch",
+        resources=ResourceSpec(n_nodes=2, elastic=True),
+        serve=ServeSpec(
+            n_slots=args.batch, page_size=page,
+            max_prompt_len=round_up(args.prompt_len, page),
+            max_seq_len=round_up(args.prompt_len + args.gen, page),
+            max_new=args.gen, temperature=args.temperature,
+            n_requests=max(args.batch // 2, 1)))
+    t0 = time.perf_counter()
+    h = mc.apply(spec)
+    ex, job = h.executor, h.job
+
+    rng = np.random.default_rng(0)
+    vocab = registry.smoke(args.arch).vocab_size
+    # the spec's n_requests arrive at placement; stagger the rest in
+    # mid-decode through the handle (continuous batching)
+    clock.run(until=clock.now + 5_000,
+              stop_when=lambda: job.jobid in ex.sessions
+              and ex.sessions[job.jobid].ticks >= 2)
+    late = [h.submit_request(rng.integers(0, vocab,
+                                          args.prompt_len).tolist(),
+                             max_new_tokens=args.gen,
+                             temperature=args.temperature)
+            for _ in range(args.batch - spec.serve.n_requests)]
+    clock.run(until=clock.now + 100_000,
+              stop_when=lambda: job.state == JobState.INACTIVE)
     dt = time.perf_counter() - t0
 
-    reqs = first + late
-    n_tok = sum(len(r.tokens) for r in reqs)
-    print(f"served {len(reqs)} requests ({len(late)} admitted mid-decode): "
-          f"{n_tok} tokens in {dt*1e3:.0f} ms (incl. compile)")
-    print(f"engine stats: {eng.stats()}")
-    for i, r in enumerate(reqs):
-        print(f"  request {i} (ttft {r.ttft*1e3:.0f} ms): {r.tokens}")
+    assert h.phase == "Completed", h.status()
+    rec = ex.ran[job.jobid]
+    print(f"served {rec['n_requests']} requests ({len(late)} admitted "
+          f"mid-decode): {rec['n_tokens']} tokens in {dt*1e3:.0f} ms "
+          f"wall (incl. compile) on mesh {rec['mesh_shape']}")
+    print(f"lifecycle: {' -> '.join(e['phase'] for e in h.events())}")
+    for i, toks in enumerate(rec["tokens"]):
+        print(f"  request {i}: {toks}")
 
 
 if __name__ == "__main__":

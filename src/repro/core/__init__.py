@@ -6,9 +6,9 @@ against."""
 from repro.core.autoscaler import Autoscaler, FluxMetricsPolicy, HPAPolicy  # noqa: F401
 from repro.core.broker import BrokerPool, BrokerState, TBON  # noqa: F401
 from repro.core.burst import BurstService, make_plugin  # noqa: F401
-from repro.core.executor import (ElasticTrainExecutor,  # noqa: F401
-                                 JaxWorkloadExecutor, ServeExecutor,
-                                 SubmeshExecutor)
+from repro.core.executor import (ElasticServeExecutor,  # noqa: F401
+                                 ElasticTrainExecutor, JaxWorkloadExecutor,
+                                 ServeExecutor, SubmeshExecutor)
 from repro.core.fault import StragglerMitigator, kill_node, make_straggler  # noqa: F401
 from repro.core.instance import FluxInstance  # noqa: F401
 from repro.core.jobspec import Job, JobSpec, JobState  # noqa: F401

@@ -37,6 +37,17 @@ def tbon_bootstrap_cost(net: NetModel, n_nodes: int, fanout: int) -> float:
     return depth * net.rpc_latency * 4          # barrier in + out
 
 
+def clamp_queued_jobs(instance, new_size: int):
+    """A shrink must clamp EVERY live request on the cluster, not just
+    running ones: a queued/requeued job still asking for more hosts
+    than the cluster will have becomes permanently unschedulable
+    otherwise.  Shared by every elastic executor's resize listener."""
+    for job in instance.queue.jobs.values():
+        if (job.state not in (JobState.CLEANUP, JobState.INACTIVE)
+                and job.spec.n_nodes > new_size):
+            job.spec.n_nodes = new_size
+
+
 class JaxWorkloadExecutor:
     """Executor for FluxInstance: real compute + structural bootstrap."""
 
@@ -128,7 +139,7 @@ class SubmeshExecutor:
     def __init__(self, clock: SimClock, net: NetModel,
                  tbon_fanout: int = 2, steps: int = 2,
                  time_scale: float = 1.0, seq_len: int = 32,
-                 strategy=None):
+                 strategy=None, cfg=None):
         self.clock = clock
         self.net = net
         self.k = tbon_fanout
@@ -136,6 +147,7 @@ class SubmeshExecutor:
         self.time_scale = time_scale
         self.seq_len = seq_len
         self.strategy = strategy
+        self.cfg = cfg                  # None -> resolve from job command
         self._cache: Dict = {}
         self.ran: Dict[int, Dict] = {}
 
@@ -155,7 +167,7 @@ class SubmeshExecutor:
         from repro.dist import steps as dsteps
         from repro.models import example_batch
 
-        cfg = smoke_config_for(command)
+        cfg = self.cfg or smoke_config_for(command)
         strategy = self.strategy or BASELINE
         tcfg = TrainConfig(total_steps=max(self.steps, 1), warmup_steps=0)
         # batch rows cover the data axis; at least 2 rows per shard
@@ -286,6 +298,9 @@ class ElasticTrainExecutor(SubmeshExecutor):
         self.ckpt_root = ckpt_root
         self.mc = None
         self.sessions: Dict[int, _ElasticSession] = {}
+        # lifecycle hook: cb(jobid, phase, **detail) — the workload
+        # reconciler wires WorkloadHandle transitions through this
+        self.phase_cb = None
 
     # -- reconciler event plumbing --------------------------------------------
     def bind(self, minicluster) -> "ElasticTrainExecutor":
@@ -296,15 +311,8 @@ class ElasticTrainExecutor(SubmeshExecutor):
 
     def _on_resize(self, new_size: int, source: str):
         """Graceful window: pods have not moved yet — checkpoint NOW."""
-        # a shrink must clamp EVERY live request on the cluster, not
-        # just running ones: a queued/requeued job still asking for
-        # more hosts than the cluster will have becomes permanently
-        # unschedulable otherwise
         if self.mc is not None:
-            for job in self.mc.instance.queue.jobs.values():
-                if (job.state not in (JobState.CLEANUP, JobState.INACTIVE)
-                        and job.spec.n_nodes > new_size):
-                    job.spec.n_nodes = new_size
+            clamp_queued_jobs(self.mc.instance, new_size)
         for ses in self.sessions.values():
             job = ses.job
             if job.state != JobState.RUN or ses.state is None:
@@ -320,6 +328,9 @@ class ElasticTrainExecutor(SubmeshExecutor):
             job.spec.n_nodes = new_size
             self.clock.trace("elastic_ckpt", jobid=job.jobid,
                              step=ses.step, target=new_size, source=source)
+            if self.phase_cb is not None:
+                self.phase_cb(job.jobid, "Resizing", target=new_size,
+                              source=source, step=ses.step)
 
     # -- session management ---------------------------------------------------
     def _meta(self, ses: _ElasticSession, source: str = "") -> Dict:
@@ -418,6 +429,11 @@ class ElasticTrainExecutor(SubmeshExecutor):
         self.clock.trace("elastic_place", jobid=job.jobid,
                          hosts=list(rset.hosts),
                          mesh=list(mesh.devices.shape), step=ses.step)
+        if self.phase_cb is not None and gen > 1:
+            # re-placements (remesh, requeue) bypass the dispatch that
+            # normally marks Running; first placements don't
+            self.phase_cb(job.jobid, "Running",
+                          mesh=list(mesh.devices.shape), step=ses.step)
         boot = tbon_bootstrap_cost(self.net, rset.n_hosts, self.k)
         self.clock.call_in(boot, self._chunk, job, ses, gen, done)
 
@@ -526,7 +542,7 @@ class ServeExecutor:
                  tbon_fanout: int = 2, n_requests: int = 2,
                  prompt_len: int = 8, max_new: int = 4,
                  time_scale: float = 1.0, strategy=None,
-                 engine_config=None):
+                 engine_config=None, cfg=None):
         self.clock = clock
         self.net = net
         self.k = tbon_fanout
@@ -536,6 +552,7 @@ class ServeExecutor:
         self.time_scale = time_scale
         self.strategy = strategy
         self.engine_config = engine_config
+        self.cfg = cfg                  # None -> resolve from job command
         self._engines: Dict = {}
         self.ran: Dict[int, Dict] = {}
 
@@ -548,7 +565,7 @@ class ServeExecutor:
         from repro.serve import Engine, EngineConfig
         ecfg = self.engine_config or EngineConfig(
             n_slots=4, page_size=8, max_seq_len=64, max_prompt_len=16)
-        eng = Engine(smoke_config_for(command), ecfg,
+        eng = Engine(self.cfg or smoke_config_for(command), ecfg,
                      strategy=self.strategy or BASELINE, mesh=mesh)
         # compile outside timing (the executor contract shared with
         # JaxWorkloadExecutor/SubmeshExecutor): one warm request drives
@@ -601,3 +618,383 @@ class ServeExecutor:
         self.clock.call_in(wall, done, "completed", wall)
 
 
+@dataclass
+class _ServeSession:
+    """One elastic serve job's state across resizes and requeues."""
+
+    job: Job
+    cfg: object
+    ecfg: object
+    engine: object = None             # live Engine, None while parked
+    parked: Optional[Dict] = None     # host-side engine snapshot
+    arrivals: List = field(default_factory=list)   # submitted while parked
+    requests: List = field(default_factory=list)   # every Request served
+    min_total: int = 0                # requests the job must serve
+    ticks: int = 0                    # engine ticks that did work
+    generation: int = 0
+    mesh: object = None
+    pending: Optional[int] = None     # resize target not yet applied
+    pending_source: str = ""
+    t_resize_sim: Optional[float] = None
+    resize_from: Optional[int] = None
+    resumes: List[Dict] = field(default_factory=list)
+    _resume_rec: Optional[Dict] = None
+
+
+class ElasticServeExecutor(ServeExecutor):
+    """Serve jobs that SURVIVE MiniCluster grow/shrink — the serving
+    sibling of :class:`ElasticTrainExecutor`, with one key difference:
+    serving checkpoints NOTHING.  The engine's entire decode state (the
+    paged KV pool, the block table / lengths / free lists, each slot's
+    next token, and the sampling key) is parked host-side in the
+    graceful window ``FluxMiniCluster.patch_size`` opens, a fresh
+    engine is compiled on the new allocation's sub-mesh
+    (``sharding.submesh_for`` through ``match_pod_local``, so resized
+    engines keep packing into one pod), and the snapshot is adopted by
+    the new engine — in-flight requests resume at the exact token they
+    were parked at, and requests submitted mid-resize are admitted on
+    the first tick after the rebuild.
+
+    Because parking freezes the tick stream rather than replaying it,
+    the generated tokens are TOKEN-FOR-TOKEN identical to an
+    uninterrupted run at any temperature (the sampling key rides the
+    snapshot); ``tests/test_elastic_serve.py`` pins this across grow
+    and shrink.  Unlike :class:`ServeExecutor`, engine ticks run in
+    chunks across simulator events so resizes land between decode
+    steps, exactly as they would against a live serving loop.
+    """
+
+    def __init__(self, clock: SimClock, net: NetModel,
+                 tbon_fanout: int = 2, n_requests: int = 2,
+                 prompt_len: int = 8, max_new: int = 4,
+                 time_scale: float = 1.0, strategy=None,
+                 engine_config=None, cfg=None, seed: int = 0,
+                 ticks_per_chunk: int = 1,
+                 sim_tick_time: Optional[float] = 5.0,
+                 drain_ticks: int = 0):
+        super().__init__(clock, net, tbon_fanout=tbon_fanout,
+                         n_requests=n_requests, prompt_len=prompt_len,
+                         max_new=max_new, time_scale=time_scale,
+                         strategy=strategy, engine_config=engine_config,
+                         cfg=cfg)
+        self.seed = seed
+        self.ticks_per_chunk = max(ticks_per_chunk, 1)
+        self.sim_tick_time = sim_tick_time
+        # ticks granted to in-flight slots inside the graceful window
+        # before the rest are parked (requests about to finish get out)
+        self.drain_ticks = drain_ticks
+        self.mc = None
+        self.sessions: Dict[int, _ServeSession] = {}
+        self._params: Dict[str, object] = {}     # cfg name -> init params
+        self.phase_cb = None
+
+    # -- reconciler event plumbing -----------------------------------------
+    def bind(self, minicluster) -> "ElasticServeExecutor":
+        """Subscribe to the MiniCluster's resize events."""
+        self.mc = minicluster
+        minicluster.on_resize.append(self._on_resize)
+        return self
+
+    def _on_resize(self, new_size: int, source: str):
+        """Graceful window: pods have not moved yet.  A shrink parks the
+        engine NOW (its hosts may be torn down the moment the window
+        closes); a grow keeps serving on the old mesh and parks only at
+        the remesh boundary, once the new ranks can actually be used."""
+        if self.mc is not None:
+            clamp_queued_jobs(self.mc.instance, new_size)
+        # a CLUSTER shrink can evict any session's hosts — including a
+        # session whose own size request does not change (its hosts may
+        # be the high-index ranks the reconciler tears down) — so every
+        # live engine parks in the window, exactly as the train executor
+        # checkpoints every RUN session unconditionally
+        cluster_shrink = (self.mc is not None
+                          and new_size < len(self.mc._assigned))
+        for ses in self.sessions.values():
+            job = ses.job
+            if job.state != JobState.RUN:
+                continue
+            ses.pending = new_size
+            ses.pending_source = source
+            ses.t_resize_sim = self.clock.now
+            ses.resize_from = (job.allocation.n_hosts
+                               if job.allocation else None)
+            job.spec.n_nodes = new_size
+            if cluster_shrink and ses.engine is not None:
+                self._drain_and_park(ses)
+            if self.phase_cb is not None:
+                self.phase_cb(job.jobid, "Resizing", target=new_size,
+                              source=source)
+
+    # -- park / restore -----------------------------------------------------
+    def _drain_and_park(self, ses: _ServeSession):
+        """Give in-flight slots up to ``drain_ticks`` normal ticks to
+        finish, then freeze the engine host-side.  Drain ticks are
+        ordinary ticks (they happen in an uninterrupted run too), so
+        parking never perturbs the token stream."""
+        import jax
+        eng = ses.engine
+        for _ in range(self.drain_ticks):
+            if not eng.scheduler.running:
+                break
+            if eng.step():
+                ses.ticks += 1
+        al, sch = eng.alloc, eng.scheduler
+        ses.parked = {
+            "pool": jax.device_get(eng.pool),
+            "block_table": al.block_table.copy(),
+            "lengths": al.lengths.copy(),
+            "reserved": al._reserved.copy(),
+            "free_pages": list(al.free_pages),
+            "free_slots": list(al.free_slots),
+            "waiting": list(sch.waiting),
+            "running": dict(sch.running),
+            "n_finished": sch.n_finished,
+            "next_token": eng._next_token.copy(),
+            "key": jax.device_get(eng._key),
+            "counters": (eng.n_prefills, eng.n_decode_steps,
+                         eng.n_generated),
+        }
+        ses.engine = None
+        self.clock.trace("serve_park", jobid=ses.job.jobid,
+                         in_flight=len(ses.parked["running"]),
+                         waiting=len(ses.parked["waiting"]))
+
+    def _restore(self, ses: _ServeSession, eng):
+        """Adopt a parked snapshot into a freshly built engine: the pool
+        reshards onto the new mesh, host bookkeeping copies over, and
+        requests that arrived mid-resize join the waiting queue in
+        submission order."""
+        from collections import deque
+
+        import jax
+        import jax.numpy as jnp
+        p = ses.parked
+        eng.pool = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), p["pool"], eng._pool_sh)
+        al, sch = eng.alloc, eng.scheduler
+        al.block_table[:] = p["block_table"]
+        al.lengths[:] = p["lengths"]
+        al._reserved[:] = p["reserved"]
+        al.free_pages = list(p["free_pages"])
+        al.free_slots = list(p["free_slots"])
+        sch.waiting = deque(p["waiting"])
+        sch.running = dict(p["running"])
+        sch.n_finished = p["n_finished"]
+        eng._next_token[:] = p["next_token"]
+        eng._key = jnp.asarray(p["key"])
+        eng.n_prefills, eng.n_decode_steps, eng.n_generated = p["counters"]
+        ses.parked = None
+        for req in ses.arrivals:
+            sch.submit(req)
+        ses.arrivals = []
+
+    def _host_params(self, cfg):
+        params = self._params.get(cfg.name)
+        if params is None:
+            import jax
+            from repro.models import Model
+            params = Model(cfg).init(jax.random.PRNGKey(self.seed))
+            self._params[cfg.name] = params
+        return params
+
+    # -- request API --------------------------------------------------------
+    def submit_request(self, job: Job, prompt, max_new: int = None,
+                       temperature: float = 0.0):
+        """Submit one request to an elastic serve job.  Arrivals before
+        the first placement or during a resize queue with everything
+        else and are admitted on the first (post-rebuild) tick."""
+        from repro.serve.scheduler import Request
+        ses = self._session(job)
+        req = Request(prompt=list(prompt),
+                      max_new_tokens=(self.max_new if max_new is None
+                                      else max_new),
+                      temperature=temperature)
+        ses.requests.append(req)
+        ses.min_total += 1
+        if ses.engine is not None:
+            ses.engine.scheduler.submit(req)
+        else:
+            ses.arrivals.append(req)
+        return req
+
+    # -- session management -------------------------------------------------
+    def _session(self, job: Job) -> _ServeSession:
+        ses = self.sessions.get(job.jobid)
+        if ses is not None:
+            return ses
+        from repro.serve import EngineConfig
+        cfg = self.cfg or smoke_config_for(job.spec.command)
+        ecfg = self.engine_config or EngineConfig(
+            n_slots=4, page_size=8, max_seq_len=64, max_prompt_len=16)
+        ses = _ServeSession(job=job, cfg=cfg, ecfg=ecfg)
+        self.sessions[job.jobid] = ses
+        return ses
+
+    # -- placement: (re)build the engine on this allocation's sub-mesh -----
+    def __call__(self, job: Job, rset: ResourceSet, done):
+        from repro.configs import BASELINE
+        from repro.dist.sharding import submesh_for
+        from repro.serve import Engine
+
+        ses = self._session(job)
+        ses.generation += 1
+        gen = ses.generation
+        mesh = submesh_for(rset)
+        t0 = time.perf_counter()
+        eng = Engine(ses.cfg, ses.ecfg,
+                     strategy=self.strategy or BASELINE, mesh=mesh,
+                     params=self._host_params(ses.cfg), seed=self.seed)
+        if ses.parked is not None:
+            self._restore(ses, eng)
+        else:
+            from repro.serve.scheduler import WAITING, Request
+            if gen == 1:
+                # first placement: the job's declared batch, ahead of
+                # any request already submitted through the handle
+                vocab = ses.cfg.vocab_size
+                plen = min(self.prompt_len, ses.ecfg.max_prompt_len)
+                prompts = job.spec.args.get("prompts")
+                if prompts is None:
+                    n = int(job.spec.args.get("n_requests",
+                                              self.n_requests))
+                    prompts = [[(7 * i + j) % vocab for j in range(plen)]
+                               for i in range(n)]
+                max_new = int(job.spec.args.get("max_new", self.max_new))
+                temp = float(job.spec.args.get("temperature", 0.0))
+                initial = [
+                    Request(prompt=list(p)[:ses.ecfg.max_prompt_len],
+                            max_new_tokens=max_new, temperature=temp)
+                    for p in prompts]
+                ses.requests[:0] = initial
+                ses.min_total += len(initial)
+            else:
+                # fault-path requeue with no parked snapshot: the pool
+                # died with the old placement, so unfinished requests
+                # restart from their prompt (tokens regenerate; only a
+                # RESIZE is pinned lossless — a lost host is a real
+                # failure)
+                for req in ses.requests:
+                    if not req.finished:
+                        req.tokens.clear()
+                        req.state = WAITING
+                        req.slot = None
+                        req.t_first = None
+            for req in ses.requests:
+                if not req.finished:
+                    eng.scheduler.submit(req)
+            ses.arrivals = []           # all live requests re-queued above
+        ses.engine = eng
+        ses.mesh = mesh
+        if ses.pending is not None and rset.n_hosts == ses.pending:
+            ses.pending = None
+        if ses.t_resize_sim is not None:
+            ses._resume_rec = {
+                "jobid": job.jobid,
+                "transition": f"{ses.resize_from}->{rset.n_hosts}",
+                "source": ses.pending_source,
+                "tick": ses.ticks,
+                "mesh_shape": list(mesh.devices.shape),
+                "rebuild_s": time.perf_counter() - t0,
+                "t_resize_sim": ses.t_resize_sim,
+            }
+            ses.t_resize_sim = None
+        self.clock.trace("serve_place", jobid=job.jobid,
+                         hosts=list(rset.hosts),
+                         mesh=list(mesh.devices.shape),
+                         in_flight=len(eng.scheduler.running))
+        if self.phase_cb is not None and gen > 1:
+            self.phase_cb(job.jobid, "Running",
+                          mesh=list(mesh.devices.shape))
+        boot = tbon_bootstrap_cost(self.net, rset.n_hosts, self.k)
+        self.clock.call_in(boot, self._tick, job, ses, gen, done)
+
+    # -- elastic transition at a tick boundary ------------------------------
+    def _try_remesh(self, job: Job, ses: _ServeSession, done) -> bool:
+        """Apply a pending resize: park (if not already), re-match at
+        the new size and rebuild.  Returns False while new ranks are
+        still booting — serving continues on the old mesh until the
+        cluster can actually satisfy the new size."""
+        want = ses.pending
+        if job.allocation is not None and job.allocation.n_hosts == want:
+            # resize was a no-op for this job's allocation (e.g. a
+            # shrink that spared its hosts): resume in place
+            ses.pending = None
+            if ses.parked is not None:
+                self(job, job.allocation, done)
+                return True
+            ses.t_resize_sim = None
+            ses.resize_from = None
+            return False
+        graph = self.mc.instance.graph
+        held = set(job.allocation.hosts) if job.allocation else set()
+        free = [h.hid for h in graph.free_hosts() if h.hid not in held]
+        if len(free) + len(held) < want:
+            return False
+        if ses.parked is None and ses.engine is not None:
+            self._drain_and_park(ses)        # grow parks at the boundary
+        graph.free(job.jobid)
+        # serve engines follow the same pod-locality rule as train jobs:
+        # pack into one pod whenever the new size fits
+        rset = (self.mc.instance.match_pod_local(want)
+                if job.spec.attributes.get("pod_local", True)
+                else graph.match(want, policy=self.mc.instance.match_policy))
+        assert rset is not None, "remesh match must succeed (checked above)"
+        graph.alloc(rset, job.jobid)
+        job.allocation = rset
+        job.spec.n_nodes = want
+        self.clock.trace("serve_remesh", jobid=job.jobid,
+                         hosts=list(rset.hosts))
+        self(job, rset, done)
+        return True
+
+    # -- the chunked serving loop -------------------------------------------
+    def _tick(self, job: Job, ses: _ServeSession, gen: int, done):
+        if gen != ses.generation or job.state != JobState.RUN:
+            return                     # superseded by a requeue/remesh
+        if ses.pending is not None and self._try_remesh(job, ses, done):
+            return
+        eng = ses.engine
+        t0 = time.perf_counter()
+        n = 0
+        if eng is not None:
+            for _ in range(self.ticks_per_chunk):
+                if not eng.step():
+                    break
+                n += 1
+                ses.ticks += 1
+        elapsed = time.perf_counter() - t0
+        if ses._resume_rec is not None and n:
+            rec = ses._resume_rec
+            rec["first_chunk_s"] = elapsed
+            rec["time_to_resume_s"] = rec["rebuild_s"] + elapsed
+            rec["sim_resume_gap_s"] = self.clock.now - rec.pop(
+                "t_resize_sim")
+            ses.resumes.append(rec)
+            ses._resume_rec = None
+        served = sum(1 for r in ses.requests if r.finished)
+        idle = eng is not None and not eng.scheduler.has_work
+        if idle and served >= ses.min_total and ses.pending is None:
+            ttfts = [r.ttft for r in ses.requests if r.ttft is not None]
+            n_tok = sum(len(r.tokens) for r in ses.requests)
+            self.ran[job.jobid] = {
+                "mesh_shape": tuple(ses.mesh.devices.shape),
+                "n_devices": int(ses.mesh.size),
+                "hosts": list(job.allocation.hosts),
+                "n_requests": len(ses.requests),
+                "n_tokens": n_tok,
+                "tokens": [list(r.tokens) for r in ses.requests],
+                "ttft_mean_s": sum(ttfts) / max(len(ttfts), 1),
+                "ticks": ses.ticks,
+                "n_resumes": len(ses.resumes),
+                "resumes": ses.resumes,
+            }
+            dt = (self.sim_tick_time * max(n, 1)
+                  if self.sim_tick_time is not None
+                  else elapsed * self.time_scale)
+            self.clock.call_in(dt, done, "completed",
+                               self.clock.now + dt - (job.t_run or 0.0))
+        else:
+            dt = (self.sim_tick_time * max(n, 1)
+                  if self.sim_tick_time is not None
+                  else max(elapsed * self.time_scale, 1e-3))
+            self.clock.call_in(dt, self._tick, job, ses, gen, done)

@@ -12,6 +12,7 @@ feature; the operator maps it onto pod-slice sub-meshes).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -47,6 +48,16 @@ class FluxInstance:
         pool.on_lost.append(self._on_node_lost)
         self._paused = False
         self._ingest_busy_until = 0.0
+        # set by FluxMiniCluster when this instance is operator-managed
+        # (elastic workloads subscribe to its resize events)
+        self.minicluster = None
+        # declarative submission path (repro.spec); created on first
+        # apply() and installed as the executor dispatch
+        self._workloads = None
+        # anti-starvation: once the top-priority unmatched job has
+        # waited this long (sim seconds), stop backfilling smaller jobs
+        # past it and let the cluster drain toward it
+        self.starvation_window = 300.0
 
     # -- submission (flux submit) -------------------------------------------
     def submit(self, spec: JobSpec, rank: int = 0) -> Job:
@@ -81,14 +92,34 @@ class FluxInstance:
     def schedule_loop(self):
         if self._paused:
             return
+        reserving = False
         for job in self.queue.schedulable():
-            rset = self.match_pod_local(job.spec.n_nodes)
+            if reserving:
+                # a starved high-priority job holds a reservation: stop
+                # backfilling smaller jobs past it (they would keep the
+                # cluster fragmented forever under continuous arrivals);
+                # burstable jobs may still leave through a plugin
+                if job.spec.burstable:
+                    for hook in self.burst_hooks:
+                        if hook(job):
+                            break
+                continue
+            # pod-locality is a per-workload property (spec-driven);
+            # default True: cross-pod links are the contended resource
+            if job.spec.attributes.get("pod_local", True):
+                rset = self.match_pod_local(job.spec.n_nodes)
+            else:
+                rset = self.graph.match(job.spec.n_nodes,
+                                        policy=self.match_policy)
             if rset is None:
                 if job.spec.burstable:
                     # offer to the bursting plugins; first taker wins
                     for hook in self.burst_hooks:
                         if hook(job):
                             break
+                elif (self.clock.now - job.t_submit
+                        >= self.starvation_window):
+                    reserving = True
                 continue
             self.graph.alloc(rset, job.jobid)
             job.allocation = rset
@@ -146,30 +177,71 @@ class FluxInstance:
     def drain(self, host: int):
         self.graph.set_state(host, "draining")
 
-    # -- execution on real devices ---------------------------------------------
+    # -- declarative submission (the ONE path) ---------------------------------
+    def apply(self, spec, *, cfg=None, strategy=None, executor_opts=None):
+        """Reconcile a declarative :class:`repro.spec.WorkloadSpec` into
+        a scheduled, executor-backed job and return its
+        :class:`repro.spec.WorkloadHandle`.
+
+        This is the single submission path for real workloads: the spec
+        is validated at apply time (structured :class:`SpecError`, never
+        a first-step crash), resources are matched pod-locally when
+        ``spec.resources.pod_local``, the executor is bound from
+        ``(kind, elastic)``, and the handle observes the unified
+        lifecycle ``Pending -> Bound -> Running -> Resizing ->
+        Completed/Failed``.
+
+        ``cfg`` / ``strategy`` override the registry/name lookup with
+        in-memory objects (tests, benches); ``executor_opts`` forwards
+        simulation knobs (``sim_step_time``, ``ticks_per_chunk``, ...)
+        to the bound executor.
+        """
+        from repro.spec.reconcile import WorkloadReconciler
+        if self._workloads is None:
+            self._workloads = WorkloadReconciler(self)
+        return self._workloads.apply(spec, cfg=cfg, strategy=strategy,
+                                     executor_opts=executor_opts)
+
+    # -- deprecated imperative executor attachment ------------------------------
+    def _deprecated(self, name: str):
+        warnings.warn(
+            f"FluxInstance.{name}() is deprecated: submit workloads "
+            "declaratively through FluxInstance.apply(WorkloadSpec) "
+            "instead (the executor is bound from the spec)",
+            DeprecationWarning, stacklevel=3)
+
+    def _set_executor(self, ex):
+        """Install an imperative executor without clobbering the spec
+        dispatch: applied workloads keep their bound executors, plain
+        JobSpec submissions route to ``ex``."""
+        if self._workloads is not None:
+            self._workloads._fallback = ex
+        else:
+            self.executor = ex
+
     def attach_submesh_executor(self, **kwargs) -> "FluxInstance":
-        """Execute scheduled jobs as real sharded train steps on the JAX
-        sub-mesh each job's ``ResourceSet`` allocation describes."""
+        """Deprecated shim: ``apply(WorkloadSpec(kind="train"))``."""
+        self._deprecated("attach_submesh_executor")
         from repro.core.executor import SubmeshExecutor
-        self.executor = SubmeshExecutor(self.clock, self.net, **kwargs)
+        self._set_executor(SubmeshExecutor(self.clock, self.net, **kwargs))
         return self
 
     def attach_serve_executor(self, **kwargs) -> "FluxInstance":
-        """Execute scheduled jobs as serving workloads: each allocation
-        hosts a continuous-batching engine on its own sub-mesh."""
+        """Deprecated shim: ``apply(WorkloadSpec(kind="serve"))``."""
+        self._deprecated("attach_serve_executor")
         from repro.core.executor import ServeExecutor
-        self.executor = ServeExecutor(self.clock, self.net, **kwargs)
+        self._set_executor(ServeExecutor(self.clock, self.net, **kwargs))
         return self
 
     def attach_elastic_executor(self, minicluster=None, **kwargs):
-        """Execute train jobs elastically: chunked sharded steps that
-        checkpoint/remesh/restore across MiniCluster resizes.  Returns
-        the executor (callers drive resizes and read its sessions)."""
+        """Deprecated shim: ``apply(WorkloadSpec(kind="train",
+        resources=ResourceSpec(elastic=True)))``."""
+        self._deprecated("attach_elastic_executor")
         from repro.core.executor import ElasticTrainExecutor
         ex = ElasticTrainExecutor(self.clock, self.net, **kwargs)
         if minicluster is not None:
             ex.bind(minicluster)
-        self.executor = ex
+        self._set_executor(ex)
         return ex
 
     # -- hierarchy -------------------------------------------------------------

@@ -78,6 +78,9 @@ class FluxMiniCluster:
                                            name=spec.name)
         self.instance = FluxInstance(clock, net, self.cluster_graph,
                                      self.pool, executor, name=spec.name)
+        # elastic workloads applied to this instance subscribe to our
+        # resize events through this backref
+        self.instance.minicluster = self
         self._desired = 0
         self._assigned: Dict[int, int] = {}      # rank -> host id
         # resize listeners: cb(new_size, source) fires SYNCHRONOUSLY in
@@ -271,9 +274,15 @@ class FluxMiniCluster:
         self.clock.run(stop_when=lambda: self.status.phase == "Ready")
         return self.t_ready - self.t_created
 
+    def apply(self, spec, **kw):
+        """Apply a declarative :class:`repro.spec.WorkloadSpec` to this
+        MiniCluster's instance (the CRD-style submission path; elastic
+        workloads ride our ``on_resize`` events automatically)."""
+        return self.instance.apply(spec, **kw)
+
     def attach_elastic_executor(self, **kwargs):
-        """Run this MiniCluster's train jobs elastically: the executor
-        subscribes to resize events and carries running jobs across
-        grow/shrink via checkpoint -> remesh -> resharded restore."""
+        """Deprecated shim: ``apply(WorkloadSpec(kind="train",
+        resources=ResourceSpec(elastic=True)))`` — kept only so old
+        drivers keep working, with a DeprecationWarning."""
         return self.instance.attach_elastic_executor(minicluster=self,
                                                      **kwargs)

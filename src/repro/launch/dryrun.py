@@ -352,14 +352,29 @@ def run_cell(arch: str, shape_name: str, *, multi_pod=False, strategy=None,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--spec", default=None,
+                    help="declarative WorkloadSpec JSON (kind: dryrun); "
+                         "arch/shape/mesh/strategy come from the spec")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--strategy", default="baseline",
                     choices=list(STRATEGIES))
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    strategy = STRATEGIES[args.strategy]
+    if args.spec:
+        from repro.spec import load_spec
+        wspec = load_spec(args.spec)
+        assert wspec.kind == "dryrun", \
+            f"launch.dryrun needs a dryrun spec, got kind={wspec.kind!r}"
+        args.arch = wspec.arch
+        args.shape = wspec.dryrun.shape
+        args.multi_pod = args.multi_pod or wspec.dryrun.multi_pod
+        strategy = wspec.resolved_strategy
+    else:
+        assert args.arch and args.shape, \
+            "--arch and --shape (or --spec) are required"
+        strategy = STRATEGIES[args.strategy]
     res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
                    strategy=strategy)
     if args.out:

@@ -22,6 +22,22 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return make_mesh((data, model), ("data", "model"))
 
 
+def resolve_workload(arch: str, *, production: bool = False,
+                     dp: int = 1, tp: int = 1, multi_pod: bool = False):
+    """Config-registry lookup + mesh construction in ONE place.
+
+    Every launcher used to hand-roll this pair; now ``launch/train``,
+    ``launch/serve`` and the WorkloadSpec loader all resolve an arch id
+    to ``(config, mesh)`` here: the full config on the production mesh
+    when ``production``, else the smoke config on a local
+    ``(dp, tp)`` mesh.
+    """
+    from repro.configs import registry
+    if production:
+        return registry.get(arch), make_production_mesh(multi_pod=multi_pod)
+    return registry.smoke(arch), make_local_mesh(dp, tp)
+
+
 # TPU v5e hardware constants (roofline targets).  Link bandwidths live
 # with the comm layer's tier model (repro/comm/topology.py) so the
 # roofline and the collective scheduler price the same hardware.

@@ -8,6 +8,11 @@ lowers on the production mesh drive this local mesh.
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
       --prompt-len 32 --gen 16 --batch 4 [--dp 1 --tp 1] \
       [--temperature 0.8]
+
+or declaratively, from the same WorkloadSpec the operator applies:
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --spec examples/specs/serve_batch.json
 """
 from __future__ import annotations
 
@@ -16,15 +21,19 @@ import time
 
 import numpy as np
 
-from repro.configs import BASELINE, OPTIMIZED, registry
-from repro.launch.mesh import make_local_mesh
+from repro.configs import STRATEGIES
+from repro.launch.mesh import resolve_workload
 from repro.serve import Engine, EngineConfig
 from repro.serve.paging import round_up
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--spec", default=None,
+                    help="declarative WorkloadSpec JSON (kind: serve); "
+                         "engine shapes + request knobs come from the "
+                         "spec")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -36,17 +45,32 @@ def main():
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel mesh axis size")
     ap.add_argument("--strategy", default="baseline",
-                    choices=["baseline", "optimized"])
+                    choices=list(STRATEGIES))
     args = ap.parse_args()
 
-    cfg = registry.smoke(args.arch)
-    mesh = make_local_mesh(args.dp, args.tp)
-    strategy = OPTIMIZED if args.strategy == "optimized" else BASELINE
-
-    ecfg = EngineConfig(
-        n_slots=args.batch, page_size=args.page_size,
-        max_prompt_len=round_up(args.prompt_len, args.page_size),
-        max_seq_len=round_up(args.prompt_len + args.gen, args.page_size))
+    if args.spec:
+        from repro.spec import load_spec
+        wspec = load_spec(args.spec)
+        assert wspec.kind == "serve", \
+            f"launch.serve needs a serve spec, got kind={wspec.kind!r}"
+        args.arch = wspec.arch
+        strategy = wspec.resolved_strategy
+        cfg, mesh = resolve_workload(args.arch, dp=args.dp, tp=args.tp)
+        s = wspec.serve
+        args.batch = s.n_slots
+        args.gen = s.max_new
+        args.temperature = s.temperature
+        args.prompt_len = min(args.prompt_len, s.max_prompt_len)
+        ecfg = wspec.engine_config()
+    else:
+        assert args.arch, "--arch or --spec is required"
+        strategy = STRATEGIES[args.strategy]
+        cfg, mesh = resolve_workload(args.arch, dp=args.dp, tp=args.tp)
+        ecfg = EngineConfig(
+            n_slots=args.batch, page_size=args.page_size,
+            max_prompt_len=round_up(args.prompt_len, args.page_size),
+            max_seq_len=round_up(args.prompt_len + args.gen,
+                                 args.page_size))
     t_build = time.perf_counter()
     eng = Engine(cfg, ecfg, strategy=strategy, mesh=mesh)
     t0 = time.perf_counter()                    # serving clock: post-build

@@ -87,7 +87,26 @@ def main():
     ap.add_argument("--shapes", nargs="*", default=SHAPE_ORDER)
     ap.add_argument("--meshes", nargs="*", default=["16x16", "2x16x16"])
     ap.add_argument("--strategies", nargs="*", default=["optimized"])
+    ap.add_argument("--spec", default=None,
+                    help="declarative WorkloadSpec JSON (kind: dryrun): "
+                         "sweep exactly that spec's cell")
     args = ap.parse_args()
+    if args.spec:
+        from repro.spec import load_spec
+        wspec = load_spec(args.spec)
+        assert wspec.kind == "dryrun", \
+            f"launch.sweep needs a dryrun spec, got kind={wspec.kind!r}"
+        if not isinstance(wspec.strategy, str):
+            # a custom strategy's field values cannot cross the dryrun
+            # subprocess boundary (it only accepts registry names)
+            sys.exit("launch.sweep --spec needs a named registry "
+                     f"strategy, got a custom ShardingStrategy "
+                     f"({wspec.strategy.name!r})")
+        strategy = wspec.strategy
+        args.archs = [wspec.arch]
+        args.shapes = [wspec.dryrun.shape]
+        args.meshes = ["2x16x16" if wspec.dryrun.multi_pod else "16x16"]
+        args.strategies = [strategy]
     run_sweep(args.archs, args.shapes, args.meshes, args.strategies)
 
 

@@ -24,9 +24,9 @@ import argparse
 
 import jax
 
-from repro.configs import BASELINE, OPTIMIZED, SHAPES, TrainConfig, registry
+from repro.configs import SHAPES, STRATEGIES, TrainConfig, registry
 from repro.configs.base import WorkloadShape
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import make_local_mesh, resolve_workload
 from repro.train import Trainer
 
 
@@ -40,8 +40,12 @@ def phase_steps(total: int, n_phases: int):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS
+    ap.add_argument("--arch", default=None, choices=registry.ARCH_IDS
                     + registry.EXTRA_IDS)
+    ap.add_argument("--spec", default=None,
+                    help="declarative WorkloadSpec JSON (kind: train); "
+                         "arch/steps/batch/seq/strategy/ckpt-dir come "
+                         "from the spec, CLI flags override nothing")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config on local devices")
     ap.add_argument("--production", action="store_true",
@@ -52,22 +56,33 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--strategy", default="baseline",
-                    choices=["baseline", "optimized"])
+                    choices=list(STRATEGIES))
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--elastic", action="store_true",
                     help="smoke-only: run grow/shrink mesh phases with "
                          "checkpoint-resharded transitions in between")
     args = ap.parse_args()
 
-    strategy = OPTIMIZED if args.strategy == "optimized" else BASELINE
-    if args.production:
-        cfg = registry.get(args.arch)
-        shape = SHAPES["train_4k"]
-        mesh = make_production_mesh()
+    if args.spec:
+        from repro.spec import load_spec
+        wspec = load_spec(args.spec)
+        assert wspec.kind == "train", \
+            f"launch.train needs a train spec, got kind={wspec.kind!r}"
+        args.arch = wspec.arch
+        args.steps = wspec.train.total_steps
+        args.batch = wspec.train.global_batch
+        args.seq = wspec.train.seq_len
+        args.ckpt_dir = wspec.train.ckpt_dir or args.ckpt_dir
+        args.elastic = args.elastic or wspec.resources.elastic
+        strategy = wspec.resolved_strategy
     else:
-        cfg = registry.smoke(args.arch)
+        assert args.arch, "--arch or --spec is required"
+        strategy = STRATEGIES[args.strategy]
+    cfg, mesh = resolve_workload(args.arch, production=args.production)
+    if args.production:
+        shape = SHAPES["train_4k"]
+    else:
         shape = WorkloadShape("smoke", "train", args.seq, args.batch)
-        mesh = make_local_mesh(1, 1)
 
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(args.steps // 10, 1))

@@ -1,0 +1,104 @@
+"""WorkloadHandle: the observable lifecycle of one applied spec.
+
+``FluxInstance.apply(spec)`` returns a handle whose phase walks the
+unified workload lifecycle::
+
+    Pending -> Bound -> Running -> Resizing -> Completed | Failed
+                 ^____________________|
+                        (re-placement after resize / fault requeue)
+
+Every transition is recorded with its simulated timestamp; ``status()``
+is the point-in-time view, ``events()`` the full history.  The handle
+is the one observation surface regardless of which executor the
+reconciler bound — train, serve, elastic or dryrun.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+PENDING = "Pending"
+BOUND = "Bound"
+RUNNING = "Running"
+RESIZING = "Resizing"
+COMPLETED = "Completed"
+FAILED = "Failed"
+
+PHASES = (PENDING, BOUND, RUNNING, RESIZING, COMPLETED, FAILED)
+
+# legal phase edges; re-placement paths loop Resizing/Running back
+# through Bound (a fault requeue re-binds, an in-place remesh does not)
+_EDGES = {
+    PENDING: (BOUND, FAILED),
+    BOUND: (RUNNING, RESIZING, FAILED),
+    RUNNING: (RESIZING, BOUND, COMPLETED, FAILED),
+    RESIZING: (BOUND, RUNNING, RESIZING, COMPLETED, FAILED),
+    COMPLETED: (),
+    FAILED: (),
+}
+
+
+class WorkloadHandle:
+    """What ``apply`` hands back: spec + job + executor + lifecycle."""
+
+    def __init__(self, spec, job, executor, clock):
+        self.spec = spec
+        self.job = job
+        self.executor = executor
+        self.clock = clock
+        self.phase = PENDING
+        self._events: List[Dict[str, Any]] = [
+            {"t": clock.now, "phase": PENDING, "jobid": job.jobid}]
+
+    # -- lifecycle ----------------------------------------------------------
+    def _transition(self, phase: str, **detail):
+        if phase == self.phase:
+            # same-phase event (e.g. progress detail): record, no edge
+            self._events.append({"t": self.clock.now, "phase": phase,
+                                 **detail})
+            return
+        if phase not in _EDGES[self.phase]:
+            raise ValueError(
+                f"illegal workload transition {self.phase} -> {phase} "
+                f"(job {self.job.jobid})")
+        self.phase = phase
+        self._events.append({"t": self.clock.now, "phase": phase, **detail})
+
+    @property
+    def done(self) -> bool:
+        return self.phase in (COMPLETED, FAILED)
+
+    # -- observation --------------------------------------------------------
+    def status(self) -> Dict[str, Any]:
+        alloc = self.job.allocation
+        return {
+            "phase": self.phase,
+            "jobid": self.job.jobid,
+            "kind": self.spec.kind,
+            "job_state": self.job.state.value,
+            "result": self.job.result,
+            "hosts": list(alloc.hosts) if alloc is not None else None,
+            "requeues": self.job.requeues,
+            "n_events": len(self._events),
+        }
+
+    def events(self) -> List[Dict[str, Any]]:
+        return [dict(e) for e in self._events]
+
+    # -- serve convenience --------------------------------------------------
+    def submit_request(self, prompt, max_new_tokens: Optional[int] = None,
+                       temperature: Optional[float] = None):
+        """Submit a generation request to an elastic serve workload
+        (admitted mid-flight; parked requests ride out a resize)."""
+        if self.spec.kind != "serve":
+            raise ValueError("submit_request: not a serve workload")
+        submit = getattr(self.executor, "submit_request", None)
+        if submit is None:
+            raise ValueError("submit_request needs an elastic serve "
+                             "workload (resources.elastic=true)")
+        s = self.spec.serve
+        return submit(
+            self.job, prompt,
+            max_new=(s.max_new if max_new_tokens is None else
+                     max_new_tokens),
+            temperature=(s.temperature if temperature is None else
+                         temperature))

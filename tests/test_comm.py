@@ -442,13 +442,18 @@ def test_elastic_remesh_carries_ef_residual_and_pins_trajectory():
     fleet = ResourceGraph(n_pods=2, hosts_per_pod=2, chips_per_host=2)
     mc = FluxMiniCluster(clock, NetModel(), fleet,
                          MiniClusterSpec(name="ce", size=4, max_size=4))
-    ex = mc.attach_elastic_executor(
-        cfg=TINY, total_steps=total, strategy=strat, sim_step_time=20.0,
-        global_batch=SHAPE.global_batch, seq_len=SHAPE.seq_len)
     mc.create()
     mc.wait_ready()
-    job = mc.instance.submit(JobSpec(n_nodes=4, walltime=1e9,
-                                     command="tiny-comm"))
+    from repro.spec import ResourceSpec, TrainSpec, WorkloadSpec
+    handle = mc.apply(
+        WorkloadSpec(kind="train", arch="tiny-comm",
+                     resources=ResourceSpec(n_nodes=4, elastic=True),
+                     train=TrainSpec(total_steps=total,
+                                     global_batch=SHAPE.global_batch,
+                                     seq_len=SHAPE.seq_len)),
+        cfg=TINY, strategy=strat,
+        executor_opts=dict(sim_step_time=20.0))
+    ex, job = handle.executor, handle.job
 
     def run_until(cond, horizon=50_000.0):
         clock.run(until=clock.now + horizon, stop_when=cond)

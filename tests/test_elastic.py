@@ -14,7 +14,7 @@ import pytest
 
 from repro.configs import BASELINE, TrainConfig
 from repro.configs.base import ModelConfig, ShardingStrategy, WorkloadShape
-from repro.core import (Autoscaler, FluxMiniCluster, JobSpec, JobState,
+from repro.core import (Autoscaler, FluxMiniCluster, JobState,
                         MiniClusterSpec, NetModel, ResourceGraph, SimClock)
 from repro.dist import steps as dsteps
 from repro.dist.sharding import make_mesh
@@ -40,20 +40,29 @@ def _run_until(clock, cond, horizon=50_000.0):
     assert cond(), "sim condition not reached within horizon"
 
 
+def _train_spec(total_steps=TOTAL, n_nodes=2):
+    from repro.spec import ResourceSpec, TrainSpec, WorkloadSpec
+    return WorkloadSpec(
+        kind="train", arch="tiny-elastic",
+        resources=ResourceSpec(n_nodes=n_nodes, elastic=True),
+        train=TrainSpec(total_steps=total_steps,
+                        global_batch=SHAPE.global_batch,
+                        seq_len=SHAPE.seq_len))
+
+
 def _elastic_cluster(strategy, total_steps=TOTAL, seed=0):
-    """A 2-host MiniCluster (maxSize 4) running one elastic train job."""
+    """A 2-host MiniCluster (maxSize 4) running one elastic train job,
+    submitted declaratively through the WorkloadSpec apply path."""
     clock = SimClock(seed=seed)
     fleet = ResourceGraph(n_pods=1, hosts_per_pod=4, chips_per_host=2)
     mc = FluxMiniCluster(clock, NetModel(), fleet,
                          MiniClusterSpec(name="el", size=2, max_size=4))
-    ex = mc.attach_elastic_executor(
-        cfg=TINY, total_steps=total_steps, strategy=strategy,
-        sim_step_time=20.0, global_batch=SHAPE.global_batch,
-        seq_len=SHAPE.seq_len)
     mc.create()
     mc.wait_ready()
-    job = mc.instance.submit(JobSpec(n_nodes=2, walltime=1e9,
-                                     command="tiny-elastic"))
+    handle = mc.apply(_train_spec(total_steps), cfg=TINY,
+                      strategy=strategy,
+                      executor_opts=dict(sim_step_time=20.0))
+    ex, job = handle.executor, handle.job
     _run_until(clock, lambda: job.jobid in ex.sessions
                and ex.sessions[job.jobid].step >= 1)
     return clock, mc, ex, job
@@ -190,8 +199,9 @@ def test_shrink_clamps_queued_jobs_too():
     the queue, or they can never match the smaller cluster."""
     _need_8()
     clock, mc, ex, job = _elastic_cluster(BASELINE, total_steps=4)
-    queued = mc.instance.submit(JobSpec(n_nodes=2, walltime=1e9,
-                                        command="tiny-elastic"))
+    queued = mc.apply(_train_spec(total_steps=4), cfg=TINY,
+                      strategy=BASELINE,
+                      executor_opts=dict(sim_step_time=20.0)).job
     clock.run(until=clock.now + 1.0)           # ingest; cluster is full
     assert queued.state == JobState.SCHED
     mc.patch_size(1)

@@ -1,0 +1,55 @@
+"""Lint WorkloadSpec JSON files against the schema.
+
+Committed example specs must never drift from the WorkloadSpec schema:
+this tool strict-parses each file (unknown keys are errors, not silent
+drops), runs full structural validation, and checks the
+``to_dict``/``from_dict`` round-trip.  CI runs it over
+``examples/specs/*.json``; non-zero exit on any error.
+
+    PYTHONPATH=src python tools/validate_spec.py \
+        --spec examples/specs/*.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", nargs="+", required=True,
+                    help="spec files (globs ok)")
+    args = ap.parse_args()
+
+    paths = []
+    for pattern in args.spec:
+        hits = sorted(glob.glob(pattern))
+        if not hits:
+            print(f"[validate_spec] {pattern}: no such file", file=sys.stderr)
+            return 2
+        paths.extend(hits)
+
+    from repro.spec import check_spec
+    failed = 0
+    for path in paths:
+        spec, errors = check_spec(path)
+        if errors:
+            failed += 1
+            print(f"[validate_spec] FAIL {path}:")
+            for e in errors:
+                print(f"  - {e['field']}: {e['message']} [{e['code']}]")
+        else:
+            print(f"[validate_spec] ok   {path} "
+                  f"(kind={spec.kind}, arch={spec.arch}, "
+                  f"name={spec.name or '-'})")
+    if failed:
+        print(f"[validate_spec] {failed}/{len(paths)} spec(s) invalid",
+              file=sys.stderr)
+        return 1
+    print(f"[validate_spec] all {len(paths)} spec(s) valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
