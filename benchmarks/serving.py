@@ -1,15 +1,26 @@
 """Serving engine under load: Poisson arrivals at three request rates.
 
 Requests arrive as an open-loop Poisson stream (seeded, so runs are
-comparable across PRs) into a continuous-batching engine; we report
-decode throughput (tokens/s) and time-to-first-token per rate, and
-write ``BENCH_serving.json`` so the serving perf trajectory is recorded
-alongside the CSV emit.
+comparable across PRs) into a continuous-batching engine.  The sweep
+runs twice over the same arrival schedule — the legacy
+prefill-then-decode engine vs the chunked-prefill engine (admission
+fused into the decode tick) — and reports decode throughput (tokens/s)
+and the time-to-first-token distribution per rate, with TTFT split into
+queue wait (submit -> admission) vs compute (admission -> first token).
+A third section sweeps the XLA flag sets over this cell's decode /
+prefill steps (``repro.tune``) and records the winner keyed by
+(arch, mesh).
 
-    PYTHONPATH=src python -m benchmarks.serving
+``BENCH_serving.json`` records all three sections plus the claim
+checks the chunked-prefill PR pins: at the highest rate the chunked
+engine's TTFT-max must not exceed legacy's (modulo timing tolerance)
+and its throughput must not regress.
+
+    PYTHONPATH=src python -m benchmarks.serving [--smoke]
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -22,22 +33,35 @@ from repro.serve import Engine, EngineConfig
 TINY = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
                    d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
                    vocab_size=256)
-N_REQUESTS = 8
+N_REQUESTS = 16
 PROMPT_LEN = 12
-MAX_NEW = 8
-RATES = (2.0, 8.0, 32.0)          # requests / second
+MAX_NEW = 16
+RATES = (4.0, 16.0, 64.0)         # requests / second
+# CPU wall-clock noise allowance on the TTFT / throughput claims
+TOL = 1.15
 
 OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
 
 
-def _make_engine() -> Engine:
-    eng = Engine(TINY, EngineConfig(n_slots=4, page_size=8,
-                                    max_prompt_len=16, max_seq_len=32))
-    # warm the compile caches so arrival timing measures steady state
-    warm = eng.submit([1] * PROMPT_LEN, max_new_tokens=2)
+def _engine_config(prefill_chunk: int = 0) -> EngineConfig:
+    # 2 slots under a 16-deep arrival burst: the top rate is
+    # queue-dominated, where legacy's dedicated prefill ticks stall the
+    # running slot's decode and push every queued request's TTFT out
+    return EngineConfig(n_slots=2, page_size=8, max_prompt_len=16,
+                        max_seq_len=32, prefill_chunk=prefill_chunk)
+
+
+def _make_engine(ecfg: EngineConfig) -> Engine:
+    eng = Engine(TINY, ecfg)
+    # warm the compile caches so arrival timing measures steady state;
+    # two staggered requests also compile the chunked engine's mixed
+    # AND pure-decode ticks
+    w1 = eng.submit([1] * PROMPT_LEN, max_new_tokens=4)
+    eng.step()
+    w2 = eng.submit([1] * PROMPT_LEN, max_new_tokens=2)
     eng.run()
-    assert warm.finished
+    assert w1.finished and w2.finished
     return eng
 
 
@@ -60,6 +84,9 @@ def _run_rate(eng: Engine, rate: float, seed: int = 0) -> dict:
     elapsed = time.perf_counter() - t0
     n_tok = sum(len(r.tokens) for r in reqs)
     ttfts = sorted(r.ttft for r in reqs)
+    queue = [r.t_admit - r.t_submit for r in reqs]
+    compute = [r.t_first - r.t_admit for r in reqs]
+    ecfg = eng.ecfg
     return {
         "rate_rps": rate,
         "n_requests": len(reqs),
@@ -68,32 +95,89 @@ def _run_rate(eng: Engine, rate: float, seed: int = 0) -> dict:
         "tokens_per_s": n_tok / elapsed,
         "ttft_mean_ms": float(np.mean(ttfts)) * 1e3,
         "ttft_p50_ms": float(ttfts[len(ttfts) // 2]) * 1e3,
+        "ttft_p99_ms": float(np.percentile(ttfts, 99)) * 1e3,
         "ttft_max_ms": float(ttfts[-1]) * 1e3,
+        # where TTFT went: waiting for a slot vs computing the prefill
+        "queue_wait_mean_ms": float(np.mean(queue)) * 1e3,
+        "queue_wait_max_ms": float(np.max(queue)) * 1e3,
+        "compute_mean_ms": float(np.mean(compute)) * 1e3,
+        "compute_max_ms": float(np.max(compute)) * 1e3,
+        "engine": dataclasses.asdict(ecfg),
     }
 
 
-def main(emit):
-    eng = _make_engine()
+def _sweep_section(prefill_chunk: int, emit, tag: str) -> list:
+    eng = _make_engine(_engine_config(prefill_chunk))
     rows = []
     for rate in RATES:
         row = _run_rate(eng, rate)
         rows.append(row)
-        emit(f"serving_poisson_{rate:g}rps",
+        emit(f"serving_{tag}_{rate:g}rps",
              row["elapsed_s"] / row["n_tokens"] * 1e6,
              f"{row['tokens_per_s']:.1f} tok/s "
              f"ttft_mean={row['ttft_mean_ms']:.1f}ms "
-             f"ttft_max={row['ttft_max_ms']:.1f}ms")
-    with open(OUT_JSON, "w") as f:
-        json.dump({"arch": TINY.name, "n_requests": N_REQUESTS,
-                   "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
-                   "engine": {"n_slots": 4, "page_size": 8,
-                              "max_seq_len": 32},
-                   "rates": rows}, f, indent=2)
+             f"ttft_p99={row['ttft_p99_ms']:.1f}ms "
+             f"queue={row['queue_wait_mean_ms']:.1f}ms "
+             f"compute={row['compute_mean_ms']:.1f}ms")
     return rows
 
 
+def _tuned_flags_section(emit, iters: int) -> dict:
+    """Sweep the XLA flag sets for this cell; key by (arch, mesh)."""
+    from repro.dist import sharding as shd
+    from repro.tune import autotune
+    import jax
+    mesh = shd.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    cell = autotune.sweep(TINY, mesh, n_slots=4, page_size=8,
+                          max_seq_len=32, prompt_len=16, iters=iters)
+    key = autotune.tune_key(TINY.name, mesh)
+    emit("serving_tuned_flags", 0.0,
+         f"{key}: best={cell['best']} "
+         f"decode={cell['results'][cell['best']]['decode_ms']:.3f}ms")
+    return {key: cell}
+
+
+def main(emit, smoke: bool = False):
+    legacy = _sweep_section(0, emit, "legacy")
+    # chunk budget = bench prompt length: admission costs zero dedicated
+    # ticks (the chunk rides a decode tick); smaller budgets trade more
+    # ticks per prompt for a tighter per-tick latency bound
+    chunked = _sweep_section(PROMPT_LEN, emit, "chunked")
+    tuned = _tuned_flags_section(emit, iters=3 if smoke else 10)
+
+    # claim checks: at the highest rate, fusing admission into the
+    # decode tick must not worsen tail TTFT or throughput
+    top_l, top_c = legacy[-1], chunked[-1]
+    claims = {
+        "chunked_ttft_max_not_worse_at_top_rate":
+            top_c["ttft_max_ms"] <= top_l["ttft_max_ms"] * TOL,
+        "chunked_tokens_per_s_not_worse_at_top_rate":
+            top_c["tokens_per_s"] >= top_l["tokens_per_s"] / TOL,
+    }
+    emit("serving_claims", 0.0,
+         f"chunked ttft_max {top_c['ttft_max_ms']:.1f}ms vs legacy "
+         f"{top_l['ttft_max_ms']:.1f}ms at {top_l['rate_rps']:g}rps; "
+         f"{claims}")
+    with open(OUT_JSON, "w") as f:
+        json.dump({"arch": TINY.name, "n_requests": N_REQUESTS,
+                   "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+                   "legacy": {"rates": legacy},
+                   "chunked_prefill": {"rates": chunked},
+                   "tuned_flags": tuned,
+                   "claims": claims}, f, indent=2)
+    if smoke and not all(claims.values()):
+        raise SystemExit(f"serving bench claim check failed: {claims}")
+    return legacy, chunked
+
+
 if __name__ == "__main__":
-    def _emit(name, us, derived=""):
-        print(f"{name},{us:.3f},{derived}")
-    main(_emit)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fail (not just report) when a claim check "
+                         "fails (CI smoke)")
+    args = ap.parse_args()
+    main(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"),
+         smoke=args.smoke)
     print(f"wrote {OUT_JSON}")

@@ -747,6 +747,7 @@ class ElasticServeExecutor(ServeExecutor):
             "free_pages": list(al.free_pages),
             "free_slots": list(al.free_slots),
             "waiting": list(sch.waiting),
+            "prefilling": list(getattr(sch, "prefilling", ())),
             "running": dict(sch.running),
             "n_finished": sch.n_finished,
             "next_token": eng._next_token.copy(),
@@ -778,6 +779,7 @@ class ElasticServeExecutor(ServeExecutor):
         al.free_pages = list(p["free_pages"])
         al.free_slots = list(p["free_slots"])
         sch.waiting = deque(p["waiting"])
+        sch.prefilling = deque(p.get("prefilling", ()))
         sch.running = dict(p["running"])
         sch.n_finished = p["n_finished"]
         eng._next_token[:] = p["next_token"]

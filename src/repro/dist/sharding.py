@@ -106,10 +106,16 @@ def opt_rules(strategy: ShardingStrategy) -> Dict[str, Rule]:
 
 
 def cache_rules(strategy: ShardingStrategy) -> Dict[str, Rule]:
-    """Decode-state rules (see transformer.cache_defs for the names)."""
+    """Decode-state rules (see transformer.cache_defs for the names).
+
+    ``pages`` is the paged KV pool's page dim: ``paged_cache_defs`` only
+    names it when the engine built a multi-shard allocator, so a pool
+    shards over the data tier exactly when the host-side free lists are
+    partitioned to match (slot-sharded pages; see serve/paging)."""
     tp = "model" if strategy.tensor_parallel else None
     return {
         "batch": DATA_AXES,
+        "pages": DATA_AXES,
         "kv_seq": tp if strategy.kv_seq_axis == "model" else None,
         "kv_heads": tp,
         "mamba_in": tp,

@@ -352,21 +352,46 @@ def build_prefill_step(cfg: ModelConfig, strategy: ShardingStrategy,
 class PagedLayout:
     """Physical layout of the paged KV pool for one engine.
 
-    ``n_pages`` counts page 0, the null page: never allocated, it absorbs
+    ``n_pages`` counts the null page(s): never allocated, they absorb
     writes from empty slots and prompt padding.  A slot's capacity is
     ``pages_per_slot * page_size`` tokens.
+
+    ``n_shards > 1`` partitions the pool over the data tier: shard ``r``
+    owns the contiguous page range ``[r * n_pages/n_shards, (r+1) *
+    n_pages/n_shards)`` with its own null page at the range's first id,
+    and slots map onto shards block-wise (slot ``s`` -> shard ``s //
+    (n_slots/n_shards)``) so a slot's block table only ever names local
+    pages.  ``n_shards == 1`` is the classic single-pool layout with
+    page 0 as THE null page.
     """
 
     page_size: int
     pages_per_slot: int
     n_pages: int
+    n_shards: int = 1
 
 
 def paged_cache_shardings(cfg: ModelConfig, layout: PagedLayout,
                           n_slots: int, strategy: ShardingStrategy, mesh):
     defs = transformer.paged_cache_defs(cfg, n_slots, layout.n_pages,
-                                        layout.page_size)
+                                        layout.page_size,
+                                        n_shards=layout.n_shards)
     return shd.cache_shardings(defs, mesh, strategy)
+
+
+def _paged_table_shardings(mesh, paged: PagedLayout, n_slots: int):
+    """Block-table / lengths shardings for a paged step: slot-sharded
+    over the data tier when the pool itself is sharded (the slot->shard
+    map keeps each data shard's table rows pointing at its local pages),
+    replicated otherwise."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    d = shd.data_axes(mesh)
+    if (paged.n_shards > 1 and d and shd.axis_size(mesh, d) ==
+            paged.n_shards and n_slots % paged.n_shards == 0):
+        ax = d[0] if len(d) == 1 else d
+        return (NamedSharding(mesh, PartitionSpec(ax, None)),
+                NamedSharding(mesh, PartitionSpec(ax)))
+    return shd.replicated(mesh), shd.replicated(mesh)
 
 
 def build_decode_step(cfg: ModelConfig, strategy: ShardingStrategy,
@@ -397,8 +422,9 @@ def build_decode_step(cfg: ModelConfig, strategy: ShardingStrategy,
                     params, pool, tokens, lengths,
                     paging=PagedView(block_table, lengths))
 
-        in_sh = (pshard, pool_sh, tok_sh, shd.replicated(mesh),
-                 shd.replicated(mesh))
+        bt_sh, len_sh = _paged_table_shardings(mesh, paged,
+                                               shape.global_batch)
+        in_sh = (pshard, pool_sh, tok_sh, bt_sh, len_sh)
         return paged_step, in_sh, (logit_sh, pool_sh)
 
     def step(params, caches, tokens, cache_index):
@@ -408,6 +434,57 @@ def build_decode_step(cfg: ModelConfig, strategy: ShardingStrategy,
     cshard = shd.cache_shardings(_cache_defs(cfg, shape), mesh, strategy)
     in_sh = (pshard, cshard, tok_sh, shd.replicated(mesh))
     return step, in_sh, (logit_sh, cshard)
+
+
+def build_mixed_step(cfg: ModelConfig, strategy: ShardingStrategy,
+                     mesh, shape: WorkloadShape, paged: PagedLayout,
+                     chunk: int):
+    """The fused decode + chunked-prefill tick (perf: a long prompt no
+    longer freezes TTFT/inter-token latency for every running slot).
+
+    Returns (step, in_shardings, out_shardings) with
+
+        step(params, pool, tokens, block_table, lengths,
+             c_tokens, c_pages, c_start, c_len, c_null)
+          -> (slot_logits, chunk_logits, new_pool)
+
+    One jitted program makes two trunk passes sharing the params: the
+    fixed-slot paged decode over ``tokens (n_slots, 1)`` (the host masks
+    mid-prefill slots to their null page / length 0 in the view it
+    passes), then a ``chunk``-token prefill pass for the single
+    admitting slot — ``c_tokens (1, chunk)`` written at positions
+    ``c_start..`` into the pages ``c_pages (1, pages_per_slot)``, rows
+    past ``c_len`` sinking into ``c_null``.  The two passes touch
+    disjoint pages, so threading the pool through them in sequence is
+    order-independent.  ``chunk_logits`` is the chunk rows' logits
+    ``(chunk, vocab)``; the host reads row ``c_len - 1`` of a request's
+    final chunk for its first sampled token.
+    """
+    assert not cfg.sub_quadratic, \
+        "chunked prefill is attention-only (seq-mixers prefill exactly)"
+    model = Model(cfg)
+    pshard = _serving_param_shardings(cfg, strategy, mesh)
+    tok_sh = shd.batch_sharding(mesh, 2, shape.global_batch, strategy)
+    logit_sh = _logits_sharding(cfg, shape, strategy, mesh)
+    pool_sh = paged_cache_shardings(cfg, paged, shape.global_batch,
+                                    strategy, mesh)
+    bt_sh, len_sh = _paged_table_shardings(mesh, paged, shape.global_batch)
+    r = shd.replicated(mesh)
+
+    def mixed_step(params, pool, tokens, block_table, lengths,
+                   c_tokens, c_pages, c_start, c_len, c_null):
+        with activation_sharding(mesh, strategy):
+            logits, pool = model.decode_step(
+                params, pool, tokens, lengths,
+                paging=PagedView(block_table, lengths))
+            c_logits, pool = model.prefill_chunk(
+                params, pool, c_tokens,
+                paging=PagedView(c_pages, c_start, n_valid=c_len,
+                                 null_page=c_null))
+        return logits, c_logits[0], pool
+
+    in_sh = (pshard, pool_sh, tok_sh, bt_sh, len_sh, r, r, r, r, r)
+    return mixed_step, in_sh, (logit_sh, r, pool_sh)
 
 
 # dry-run compatibility name: "serve" cells are decode cells

@@ -181,3 +181,105 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, block_table,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
       qg, k_pages, v_pages)
     return out.reshape(b, 1, h, d)
+
+
+# --------------------------------------------------------------------------
+# Chunked-prefill variant: C query rows of ONE admitting slot attend its
+# pages mid-prefill.  Same block-table walk as the decode kernel, but the
+# query tile carries all (C, g) rows at once and the causal limit is
+# per-row (position start + j), so partially-filled final pages are
+# honored: page pi is processed iff pi * page < start + n_valid, and
+# inside it keys past each row's own position are masked.
+# --------------------------------------------------------------------------
+
+
+def _paged_prefill_kernel(bt_ref, start_ref, nv_ref, q_ref, k_ref, v_ref,
+                          o_ref, m_scr, l_scr, acc_scr, *, scale, page, g,
+                          chunk):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    np_ = pl.num_programs(2)
+    start = start_ref[bi]
+    filled = start + nv_ref[bi]
+    rows = chunk * g
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(pi * page < filled)            # skip pages past the fill
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # rows x d
+        k = k_ref[0, :, 0].astype(jnp.float32)         # page x d
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = pi * page + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page), 1)
+        qpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page), 0) // g           # row j*g+h_ -> pos j
+        s = jnp.where(kpos <= qpos, s, NEG_INF)        # rows x page
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_attention_kernel(q, k_pages, v_pages, block_table,
+                                   start, n_valid, *, scale=None,
+                                   interpret=False):
+    """q: (B, C, H, D) chunk queries at positions start..start+C-1;
+    k_pages, v_pages: (P, page, Hkv, D) with the chunk's own KV already
+    written; block_table: (B, pages_per_slot) int32; start, n_valid:
+    (B,) int32.  Rows past ``n_valid`` produce garbage (discarded)."""
+    b, chunk, h, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    maxp = block_table.shape[1]
+    g = h // hkv
+    scale = scale or d ** -0.5
+    # (B, Hkv, C*g, D): position-major rows so row // g is the position
+    qg = q.reshape(b, chunk, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+          .reshape(b, hkv, chunk * g, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # block_table, start, n_valid
+        grid=(b, hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk * g, d),
+                         lambda b_, hk, pi, bt, st, nv: (b_, hk, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, hk, pi, bt, st, nv:
+                         (bt[b_, pi], 0, hk, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, hk, pi, bt, st, nv:
+                         (bt[b_, pi], 0, hk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk * g, d),
+                               lambda b_, hk, pi, bt, st, nv:
+                               (b_, hk, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((chunk * g, 1), jnp.float32),
+                        pltpu.VMEM((chunk * g, 1), jnp.float32),
+                        pltpu.VMEM((chunk * g, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, scale=scale, page=page,
+                          g=g, chunk=chunk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, chunk * g, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), start.astype(jnp.int32),
+      n_valid.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(b, hkv, chunk, g, d).transpose(0, 2, 1, 3, 4) \
+              .reshape(b, chunk, h, d)

@@ -2,7 +2,8 @@
 from __future__ import annotations
 
 from repro.kernels.decode_attention.kernel import (
-    decode_attention_kernel, paged_decode_attention_kernel)
+    decode_attention_kernel, paged_decode_attention_kernel,
+    paged_prefill_attention_kernel)
 
 
 def decode_attention(q, k, v, cache_len, *, scale=None, interpret=False):
@@ -15,3 +16,10 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
     return paged_decode_attention_kernel(q, k_pages, v_pages, block_table,
                                          lengths, scale=scale,
                                          interpret=interpret)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, start,
+                            n_valid, *, scale=None, interpret=False):
+    return paged_prefill_attention_kernel(q, k_pages, v_pages, block_table,
+                                          start, n_valid, scale=scale,
+                                          interpret=interpret)

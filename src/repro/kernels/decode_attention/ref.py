@@ -43,3 +43,72 @@ def paged_decode_ref(q, k_pages, v_pages, block_table, lengths, *,
     k = k_pages[block_table].reshape(b, maxp * page, hkv, d)
     v = v_pages[block_table].reshape(b, maxp * page, hkv, d)
     return decode_ref(q, k, v, lengths, scale=scale)
+
+
+def paged_prefill_ref(q, k_pages, v_pages, block_table, start, n_valid, *,
+                      scale=None, block_kv=1024):
+    """Gather-then-attend oracle for a chunk of prompt positions.
+
+    q: (B, C, H, D) — the chunk's query rows at absolute positions
+    ``start[b] + j``; the chunk's own KV must already be written into
+    the pages.  Row ``j >= n_valid[b]`` is padding: its output is
+    garbage (it attends whatever the causal window holds) and callers
+    discard it.
+
+    The math replays ``flash_attention.ref._fwd`` exactly — same GQA
+    head repeat, same block scan, running max/normalizer, same
+    ``p @ v`` accumulation dtype — with a per-row causal limit of
+    ``start + j``, so a chunked prefill is bit-identical to the legacy
+    whole-prompt flash prefill over the same positions (masked-out
+    positions contribute exact zeros).
+    """
+    from repro import flags
+    b, sq, h, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    maxp = block_table.shape[1]
+    g = h // hkv
+    scale = scale or d ** -0.5
+    k = k_pages[block_table].reshape(b, maxp * page, hkv, d)
+    v = v_pages[block_table].reshape(b, maxp * page, hkv, d)
+    if g > 1:                      # mirror flash ref's GQA repeat
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    skv = maxp * page
+    bs = min(flags.inner_blocks(skv, block_kv), skv)
+    pad = (-skv) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (skv + pad) // bs
+    kb = k.reshape(b, nb, bs, h, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, bs, h, d).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(b, sq, h, 1, d)
+    qpos = jnp.reshape(start, (-1, 1)) + jnp.arange(sq)[None, :]  # (B, C)
+    F32 = jnp.float32
+    m0 = jnp.full((b, sq, h, 1), NEG_INF, F32)
+    l0 = jnp.zeros((b, sq, h, 1), F32)
+    a0 = jnp.zeros((b, sq, h, 1, d), F32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, i = inp
+        logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kblk,
+                            preferred_element_type=F32) * scale
+        kpos = i * bs + jnp.arange(bs)
+        valid = ((kpos[None, None, :] < skv)
+                 & (kpos[None, None, :] <= qpos[:, :, None]))
+        logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+        mb = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - mb[..., None])
+        alpha = jnp.exp(m - mb)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=F32)
+        return (mb, l, acc), None
+
+    (_, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+    l = jnp.maximum(l, 1e-30)
+    del n_valid                    # padding rows are the caller's problem
+    return (acc / l[..., None]).reshape(b, sq, h, d).astype(q.dtype)

@@ -57,6 +57,26 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
                                      lengths, scale=scale)
 
 
+def paged_prefill_attention(q, k_pages, v_pages, block_table, start,
+                            n_valid, *, scale=None, impl=None):
+    """Chunked-prefill attention over a block-paged KV pool: the C query
+    rows of one admitting slot (positions ``start..start+C-1``, KV
+    already scattered into its pages) attend the slot's filled prefix
+    with a per-row causal limit.  Rows past ``n_valid`` are padding —
+    their outputs are garbage and callers discard them.  The ref path
+    replays the flash prefill ref's exact block math, so chunked prefill
+    stays bit-identical to the legacy whole-prompt prefill.
+    """
+    impl = impl or _auto()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.decode_attention import ops as _dec_ops
+        return _dec_ops.paged_prefill_attention(
+            q, k_pages, v_pages, block_table, start, n_valid, scale=scale,
+            interpret=(impl == "interpret"))
+    return _dec_ref.paged_prefill_ref(q, k_pages, v_pages, block_table,
+                                      start, n_valid, scale=scale)
+
+
 def quantize_int8(x, *, impl=None):
     """Block-scaled symmetric int8: x (n_blocks, block) f32 ->
     (codes int8, scales f32 (n_blocks,)).  The cross-pod gradient

@@ -17,17 +17,33 @@ or declaratively, from the same WorkloadSpec the operator applies:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
 
-from repro.configs import STRATEGIES
-from repro.launch.mesh import resolve_workload
-from repro.serve import Engine, EngineConfig
-from repro.serve.paging import round_up
+
+def _apply_tuned_flags(arch: str, dp: int, tp: int, path: str) -> str:
+    """Load the swept winner for this (arch, mesh) cell and export it
+    via XLA_FLAGS *before* the jax backend initializes (compiler flags
+    are process-wide; this is the cross-process application path — the
+    in-process path is ``compiler_options`` inside the tune sweep).
+
+    Returns the applied flag-set key, or "" when nothing was tuned.
+    """
+    from repro.tune.autotune import load_tuned, tune_key
+    key = tune_key(arch, (dp, tp))
+    flags = load_tuned(key, path)
+    if not flags:
+        return ""
+    frag = " ".join(f"--{k}={v}" for k, v in flags.items())
+    prev = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = f"{prev} {frag}".strip()
+    return key
 
 
 def main():
+    from repro.configs import STRATEGIES
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--spec", default=None,
@@ -46,7 +62,22 @@ def main():
                     help="tensor-parallel mesh axis size")
     ap.add_argument("--strategy", default="baseline",
                     choices=list(STRATEGIES))
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help=">0: chunked prefill inside the decode tick")
+    ap.add_argument("--tuned-flags", default=None, metavar="JSON",
+                    help="TUNED_FLAGS.json from repro.tune.autotune; the "
+                         "(arch, mesh) cell's winning XLA flags are "
+                         "applied before the backend starts")
     args = ap.parse_args()
+
+    tuned = ""
+    if args.tuned_flags and args.arch:
+        tuned = _apply_tuned_flags(args.arch, args.dp, args.tp,
+                                   args.tuned_flags)
+
+    from repro.launch.mesh import resolve_workload
+    from repro.serve import Engine, EngineConfig
+    from repro.serve.paging import round_up
 
     if args.spec:
         from repro.spec import load_spec
@@ -70,7 +101,8 @@ def main():
             n_slots=args.batch, page_size=args.page_size,
             max_prompt_len=round_up(args.prompt_len, args.page_size),
             max_seq_len=round_up(args.prompt_len + args.gen,
-                                 args.page_size))
+                                 args.page_size),
+            prefill_chunk=args.prefill_chunk)
     t_build = time.perf_counter()
     eng = Engine(cfg, ecfg, strategy=strategy, mesh=mesh)
     t0 = time.perf_counter()                    # serving clock: post-build
@@ -88,7 +120,8 @@ def main():
     per_tok = (elapsed - max(ttft)) / max(args.gen - 1, 1)
     print(f"mesh {dict(mesh.shape)} strategy {strategy.name} "
           f"temperature {args.temperature} "
-          f"(engine build {(t0 - t_build)*1e3:.0f} ms)")
+          f"(engine build {(t0 - t_build)*1e3:.0f} ms)"
+          + (f" tuned_flags {tuned}" if tuned else ""))
     print(f"prefill {args.prompt_len} toks x{args.batch}: "
           f"ttft {min(ttft)*1e3:.1f}-{max(ttft)*1e3:.1f} ms (incl. compile)")
     print(f"decode {args.gen} toks x{args.batch}: {n_tok} tokens in "

@@ -29,11 +29,20 @@ class PagedView(NamedTuple):
     With a ``PagedView``, decode attention reads per-request pages out
     of a shared ``(n_pages, page_size, kv, hd)`` pool instead of one
     contiguous ``(batch, seq)`` cache; ``lengths`` doubles as the
-    per-slot write position for the incoming token.
+    per-slot write position for the incoming token(s).
+
+    Chunked prefill (s > 1) additionally sets ``n_valid`` — how many of
+    the s incoming rows are real prompt tokens — and ``null_page``, the
+    page id that absorbs the padding rows' KV writes (pad positions may
+    fall past the slot's reserved pages, so their destination must be
+    forced to the null page rather than left to index clamping, which
+    would corrupt the slot's last real page).
     """
 
     block_table: jax.Array      # (n_slots, pages_per_slot) int32 page ids
     lengths: jax.Array          # (n_slots,) int32 filled tokens per slot
+    n_valid: Optional[jax.Array] = None    # (B,) real rows per chunk
+    null_page: Optional[jax.Array] = None  # scalar int32 pad sink page
 
 # --------------------------------------------------------------------------
 # Norms
@@ -176,7 +185,7 @@ def attention_apply(cfg: ModelConfig, p, x, *, positions=None, causal=True,
         else:
             out = constrain(out, "act_batch", "act_seq_force", None, None)
         new_kv = (k, v)
-    elif paging is not None:                            # paged decode: s == 1
+    elif paging is not None and s == 1:                 # paged decode
         page_size = cache["k"].shape[1]
         pos = paging.lengths                                       # (B,)
         page = paging.block_table[jnp.arange(b), pos // page_size]
@@ -187,6 +196,27 @@ def attention_apply(cfg: ModelConfig, p, x, *, positions=None, causal=True,
         cv = constrain(cv, None, None, "act_kv", None)
         out = ops.paged_decode_attention(q, ck, cv, paging.block_table,
                                          pos + 1)
+        new_kv = (ck, cv)
+    elif paging is not None:                            # paged chunk prefill
+        page_size = cache["k"].shape[1]
+        maxp = paging.block_table.shape[1]
+        pos = paging.lengths                                       # (B,)
+        offs = pos[:, None] + jnp.arange(s)[None, :]               # (B, s)
+        valid = jnp.arange(s)[None, :] < paging.n_valid[:, None]
+        page = paging.block_table[jnp.arange(b)[:, None],
+                                  jnp.minimum(offs // page_size, maxp - 1)]
+        # pad rows sink into the null page (their offs may point past
+        # the slot's reserved pages — never let them clamp onto a real
+        # page and corrupt prompt KV)
+        page = jnp.where(valid, page, paging.null_page)
+        ck = cache["k"].at[page, offs % page_size].set(
+            k.astype(cache["k"].dtype))
+        cv = cache["v"].at[page, offs % page_size].set(
+            v.astype(cache["v"].dtype))
+        ck = constrain(ck, None, None, "act_kv", None)
+        cv = constrain(cv, None, None, "act_kv", None)
+        out = ops.paged_prefill_attention(q, ck, cv, paging.block_table,
+                                          pos, paging.n_valid)
         new_kv = (ck, cv)
     else:                                               # decode: s == 1
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(

@@ -140,6 +140,25 @@ class Model:
             last = logits[:, -1]
         return last, new_caches
 
+    def prefill_chunk(self, params, pool, tokens, paging, *,
+                      compute_dtype=jnp.bfloat16):
+        """Consume one chunk of prompt tokens into a paged pool.
+
+        tokens: (B, C) — rows at absolute positions ``paging.lengths[b]
+        + j``; rows past ``paging.n_valid[b]`` are padding whose KV
+        sinks into ``paging.null_page``.  Returns ``(logits (B, C, V),
+        new_pool)`` — the caller reads row ``n_valid - 1`` of the final
+        chunk for the first sampled token.  Attention-only archs: a
+        seq-mixer recurrence cannot skip the padded rows.
+        """
+        assert not self.cfg.sub_quadratic, \
+            "chunked prefill needs masking; seq-mixers prefill exactly"
+        logits, new_pool, _ = self._trunk(
+            params, tokens, mode="decode", caches=pool,
+            cache_index=paging.lengths, remat=False,
+            compute_dtype=compute_dtype, paging=paging)
+        return logits, new_pool
+
     def decode_step(self, params, caches, tokens, cache_index, *,
                     compute_dtype=jnp.bfloat16, paging=None):
         """One token step. tokens: (B, 1); cache_index: scalar position,

@@ -129,22 +129,30 @@ def cache_defs(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 def paged_cache_defs(cfg: ModelConfig, n_slots: int, n_pages: int,
-                     page_size: int):
+                     page_size: int, n_shards: int = 1):
     """Paged decode-state schema: attention KV lives in one shared page
     pool per position (``(n_pages, page_size, kv, hd)``, indexed by the
     engine's block table; page 0 is the never-allocated null page), while
     seq-mixer states stay slot-major.  Sharding resolves through the same
-    ``cache_rules`` axis names as the contiguous cache."""
+    ``cache_rules`` axis names as the contiguous cache.
+
+    ``n_shards > 1`` marks the page dim with the logical ``pages`` axis
+    so the pool shards over the data tier (slot-sharded page shards with
+    per-shard free lists and null pages — see ``serve/paging``) instead
+    of replicating; the allocator must have been built with the same
+    shard count so every slot's pages stay within its own shard.
+    """
     assert not cfg.encoder_layers, \
         "paged serving supports decoder-only architectures"
     kv, hd = cfg.n_kv_heads, cfg.head_dim
+    pages_ax = "pages" if n_shards > 1 else None
     base = cache_defs(cfg, n_slots, 1, 0, stacked=False)
     out = {}
     for i, kind in enumerate(cfg.block_pattern):
         c = base[f"p{i}"]
         if kind == "attn":
             c = {n: PDef((n_pages, page_size, kv, hd),
-                         (None, None, "kv_heads", None),
+                         (pages_ax, None, "kv_heads", None),
                          init="zeros", dtype="bfloat16")
                  for n in ("k", "v")}
         out[f"p{i}"] = stack(c, cfg.n_repeats)

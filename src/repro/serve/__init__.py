@@ -7,4 +7,4 @@ requests flow through slots/pages instead of recompiles.
 """
 from repro.serve.engine import Engine, EngineConfig, sample_tokens  # noqa: F401
 from repro.serve.paging import PageAllocator, init_pool, scatter_prefill  # noqa: F401
-from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler, SubmitError  # noqa: F401

@@ -17,6 +17,7 @@ sampling (Gumbel-max), exact argmax at ``temperature == 0``.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Iterator, Optional, Sequence
 
@@ -62,15 +63,24 @@ class EngineConfig:
     max_prompt_len: int = 64      # prefill step capacity
     n_pages: int = 0              # 0 -> every slot can reach max_seq_len
     pad_id: int = 0               # prompt padding token
+    prefill_chunk: int = 0        # >0: chunked prefill inside decode ticks
+    dp_shards: int = 1            # page-pool shards over the data tier
+    prefill_cache_cap: int = 8    # LRU bound on per-length prefill compiles
 
     def layout(self) -> dsteps.PagedLayout:
         assert self.max_seq_len % self.page_size == 0
         assert self.max_prompt_len % self.page_size == 0
         assert self.max_prompt_len <= self.max_seq_len
+        ns = max(self.dp_shards, 1)
+        assert self.n_slots % ns == 0, \
+            f"dp_shards={ns} must divide n_slots={self.n_slots}"
         pps = self.max_seq_len // self.page_size
-        n_pages = self.n_pages or self.n_slots * pps + 1
+        n_pages = self.n_pages or self.n_slots * pps + ns
+        assert n_pages % ns == 0, \
+            f"dp_shards={ns} must divide n_pages={n_pages}"
         return dsteps.PagedLayout(page_size=self.page_size,
-                                  pages_per_slot=pps, n_pages=n_pages)
+                                  pages_per_slot=pps, n_pages=n_pages,
+                                  n_shards=ns)
 
 
 class Engine:
@@ -91,7 +101,13 @@ class Engine:
         layout = ecfg.layout()
         self.layout = layout
         self.alloc = paging.PageAllocator(ecfg.n_slots, layout)
-        self.scheduler = Scheduler(self.alloc, ecfg.max_prompt_len)
+        # chunked prefill needs causal masking: seq-mixer recurrences
+        # cannot skip the chunk's padded rows, so those archs keep the
+        # classic prefill-then-decode tick
+        self._chunked = ecfg.prefill_chunk > 0 and not cfg.sub_quadratic
+        self.scheduler = Scheduler(
+            self.alloc, ecfg.max_prompt_len,
+            prefill_chunk=ecfg.prefill_chunk if self._chunked else 0)
 
         dshape = WorkloadShape(f"serve{ecfg.n_slots}", "decode",
                                ecfg.max_seq_len, ecfg.n_slots)
@@ -109,13 +125,39 @@ class Engine:
 
         self._decode = jax.jit(
             decode_fn,
-            in_shardings=(pshard, pool_sh, din[2], self._repl, self._repl,
+            in_shardings=(pshard, pool_sh, din[2], din[3], din[4],
                           self._repl, self._repl),
             out_shardings=(self._repl, pool_sh), donate_argnums=(1,))
+
+        if self._chunked:
+            raw_mixed, min_sh, _ = dsteps.build_mixed_step(
+                cfg, strategy, self.mesh, dshape, paged=layout,
+                chunk=ecfg.prefill_chunk)
+            r = self._repl
+
+            def mixed_fn(params, pool, tokens, block_table, lengths,
+                         c_tokens, c_pages, c_start, c_len, c_null,
+                         c_slot, c_final, temps, key):
+                logits, c_logits, pool = raw_mixed(
+                    params, pool, tokens, block_table, lengths,
+                    c_tokens, c_pages, c_start, c_len, c_null)
+                # a final chunk samples from its last REAL prompt row
+                last = c_logits[jnp.maximum(c_len[0] - 1, 0)]
+                logits = jnp.where(c_final,
+                                   logits.at[c_slot].set(last), logits)
+                return sample_tokens(logits, temps, key), pool
+
+            self._mixed = jax.jit(
+                mixed_fn,
+                in_shardings=tuple(min_sh) + (r, r, r, r),
+                out_shardings=(r, pool_sh), donate_argnums=(1,))
         # seq-mixer state is a recurrence over every prefilled token, so
         # padding would leak into it: those archs prefill at exact length
         self._exact_prefill = cfg.sub_quadratic
-        self._prefill_cache = {}
+        self._prefill_cache: OrderedDict = OrderedDict()
+        self._pc_hits = 0
+        self._pc_misses = 0
+        self._pc_evictions = 0
 
         if params is None:
             params = Model(cfg).init(jax.random.PRNGKey(seed))
@@ -128,6 +170,7 @@ class Engine:
         self._key = jax.random.PRNGKey(seed + 1)
         self.n_prefills = 0
         self.n_decode_steps = 0
+        self.n_mixed_steps = 0
         self.n_generated = 0
 
     # -- request API --------------------------------------------------------
@@ -159,8 +202,23 @@ class Engine:
     # -- engine ticks -------------------------------------------------------
     def step(self) -> bool:
         """One tick: admit + prefill new arrivals, else decode in-flight
-        slots.  Returns False when there is no work."""
+        slots.  Returns False when there is no work.
+
+        Chunked engines never stall decode behind a prompt: while any
+        slot is mid-prefill the tick is *mixed* — one prompt chunk for
+        the head admitting slot fused with a single-token decode of
+        every fully prefilled slot.
+        """
         admitted = self.scheduler.admit()
+        if self._chunked:
+            nxt = self.scheduler.next_chunk()
+            if nxt is not None:
+                self._run_mixed(*nxt)
+                return True
+            if self.scheduler.running:
+                self._run_decode()
+                return True
+            return False
         if admitted:
             for req in admitted:
                 self._run_prefill(req)
@@ -182,7 +240,10 @@ class Engine:
             else self.ecfg.max_prompt_len
         fn = self._prefill_cache.get(plen)
         if fn is not None:
+            self._pc_hits += 1
+            self._prefill_cache.move_to_end(plen)
             return plen, fn
+        self._pc_misses += 1
         cfg, ps = self.cfg, self.ecfg.page_size
         cap = paging.round_up(plen, ps)        # KV padded to a page boundary
         pshape = WorkloadShape(f"serve_prefill{plen}", "prefill", plen, 1)
@@ -206,6 +267,11 @@ class Engine:
                           self._pool_sh, r, r, r, r),
             out_shardings=(r, self._pool_sh), donate_argnums=(3,))
         self._prefill_cache[plen] = fn
+        # LRU bound: a long-tail of exact prompt lengths (seq-mixer
+        # archs) must not hold every compile alive forever
+        while len(self._prefill_cache) > max(self.ecfg.prefill_cache_cap, 1):
+            self._prefill_cache.popitem(last=False)
+            self._pc_evictions += 1
         return plen, fn
 
     def _emit(self, req: Request, tok: int) -> None:
@@ -234,6 +300,44 @@ class Engine:
         self.n_prefills += 1
         self._emit(req, int(tok[0]))
 
+    def _run_mixed(self, req: Request, start: int, n: int) -> None:
+        """One fused tick: decode every fully prefilled slot + consume
+        ``n`` prompt tokens (positions ``start..start+n``) of ``req``."""
+        ecfg, slot = self.ecfg, req.slot
+        final = start + n >= len(req.prompt)
+        c_tokens = np.full((1, ecfg.prefill_chunk), ecfg.pad_id, np.int32)
+        c_tokens[0, :n] = req.prompt[start:start + n]
+        c_pages = np.ascontiguousarray(self.alloc.block_table[slot:slot + 1])
+        active = self.scheduler.decodable()         # slot -> request
+        for s in active:
+            self.alloc.ensure_page(s)
+        bt = self.alloc.block_table.copy()
+        lens = self.alloc.lengths.copy()
+        # mid-prefill slots must not decode: the view parks them on
+        # their null page at length 0 (the empty-slot convention)
+        for r_ in self.scheduler.prefilling:
+            bt[r_.slot, :] = self.alloc.null_page_of(r_.slot)
+            lens[r_.slot] = 0
+        temps = np.zeros((ecfg.n_slots,), np.float32)
+        for s, r_ in active.items():
+            temps[s] = r_.temperature
+        if final:
+            temps[slot] = req.temperature
+        tok, self.pool = self._mixed(
+            self.params, self.pool, self._next_token[:, None], bt, lens,
+            c_tokens, c_pages, np.array([start], np.int32),
+            np.array([n], np.int32),
+            np.int32(self.alloc.null_page_of(slot)),
+            np.int32(slot), np.bool_(final), temps, self._split())
+        self.n_mixed_steps += 1
+        tok = np.asarray(tok)
+        for s, r_ in active.items():
+            self.alloc.advance(s)
+            self._emit(r_, int(tok[s]))
+        if self.scheduler.chunk_done(req, n):
+            self.n_prefills += 1
+            self._emit(req, int(tok[slot]))
+
     def _run_decode(self) -> None:
         active = dict(self.scheduler.running)       # slot -> request
         for slot in active:
@@ -256,8 +360,17 @@ class Engine:
         return {
             "n_prefills": self.n_prefills,
             "n_decode_steps": self.n_decode_steps,
+            "n_mixed_steps": self.n_mixed_steps,
             "n_generated": self.n_generated,
             "pages_in_use": self.alloc.pages_in_use(),
             "free_pages": len(self.alloc.free_pages),
             "mesh_shape": dict(self.mesh.shape),
+            "dp_shards": self.layout.n_shards,
+            "prefill_cache": {
+                "size": len(self._prefill_cache),
+                "cap": self.ecfg.prefill_cache_cap,
+                "hits": self._pc_hits,
+                "misses": self._pc_misses,
+                "evictions": self._pc_evictions,
+            },
         }

@@ -38,7 +38,8 @@ def round_up(n_tokens: int, page_size: int) -> int:
 def init_pool(cfg: ModelConfig, n_slots: int, layout: PagedLayout):
     """Materialize the zeroed page pool / slot-state tree."""
     defs = transformer.paged_cache_defs(cfg, n_slots, layout.n_pages,
-                                        layout.page_size)
+                                        layout.page_size,
+                                        n_shards=layout.n_shards)
     return P.tree_map(
         lambda d: jnp.zeros(d.shape, d.resolve_dtype(jnp.bfloat16)), defs)
 
@@ -99,19 +100,61 @@ class PageAllocator:
     allocation can never fail mid-flight; the pages themselves are
     handed out lazily as the sequence grows and returned to the free
     list the moment the slot is evicted.
+
+    With ``layout.n_shards > 1`` (data-parallel page-pool sharding) the
+    pool splits into ``n_shards`` contiguous page ranges, one per data
+    shard, each with its OWN free list and its own null page (the
+    range's first id) — slot ``s`` lives on shard ``s // (n_slots /
+    n_shards)`` and only ever owns pages from its shard, so a
+    data-sharded pool never writes across shard boundaries.  The
+    single-shard layout is bit-compatible with the classic allocator
+    (page 0 the null page, one LIFO free list).
     """
 
     def __init__(self, n_slots: int, layout: PagedLayout):
         self.layout = layout
         self.n_slots = n_slots
-        # LIFO free lists: freed pages are re-used first (the eviction
-        # re-use path the tests pin down)
-        self.free_pages: List[int] = list(range(layout.n_pages - 1, 0, -1))
+        ns = getattr(layout, "n_shards", 1) or 1
+        assert layout.n_pages % ns == 0, (layout.n_pages, ns)
+        assert n_slots % ns == 0, (n_slots, ns)
+        self.n_shards = ns
+        self._stride = layout.n_pages // ns
+        self._slots_per_shard = n_slots // ns
+        # LIFO free lists (one per shard): freed pages are re-used first
+        # (the eviction re-use path the tests pin down); each shard's
+        # null page (its first id) never enters the list
+        self._free: List[List[int]] = [
+            list(range((r + 1) * self._stride - 1, r * self._stride, -1))
+            for r in range(ns)]
         self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
         self.block_table = np.zeros((n_slots, layout.pages_per_slot),
                                     np.int32)
+        for slot in range(n_slots):
+            self.block_table[slot, :] = self.null_page_of(slot)
         self.lengths = np.zeros((n_slots,), np.int32)
         self._reserved = np.zeros((n_slots,), np.int64)
+
+    # -- shard mapping ------------------------------------------------------
+    def shard_of(self, slot: int) -> int:
+        return slot // self._slots_per_shard
+
+    def null_page_of(self, slot: int) -> int:
+        return self.shard_of(slot) * self._stride      # 0 when n_shards == 1
+
+    @property
+    def free_pages(self) -> List[int]:
+        """All free pages, shard-major (THE free list when unsharded)."""
+        if self.n_shards == 1:
+            return self._free[0]
+        return [p for shard in self._free for p in shard]
+
+    @free_pages.setter
+    def free_pages(self, pages):
+        """Restore path (elastic park/adopt): pages re-bucket into their
+        owning shard's list, order preserved."""
+        self._free = [[] for _ in range(self.n_shards)]
+        for p in pages:
+            self._free[int(p) // self._stride].append(int(p))
 
     # -- capacity queries ---------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -121,21 +164,37 @@ class PageAllocator:
     def reserved(self) -> int:
         return int(self._reserved.sum())
 
+    def _shard_free(self, shard: int) -> int:
+        """Unreserved pages available on one shard."""
+        lo, hi = (shard * self._slots_per_shard,
+                  (shard + 1) * self._slots_per_shard)
+        return len(self._free[shard]) - int(self._reserved[lo:hi].sum())
+
+    def _fit_slot(self, need_pages: int):
+        """First free slot (in hand-out order) whose shard can hold the
+        request; None when no shard fits it."""
+        for slot in reversed(self.free_slots):         # pop() order
+            if need_pages <= self._shard_free(self.shard_of(slot)):
+                return slot
+        return None
+
     def can_admit(self, prompt_len: int, max_new: int) -> bool:
         total = prompt_len + max_new
         if total > self.layout.pages_per_slot * self.layout.page_size:
             return False
         if not self.free_slots:
             return False
-        return self.pages_for(total) <= len(self.free_pages) - self.reserved
+        return self._fit_slot(self.pages_for(total)) is not None
 
     # -- slot lifecycle -----------------------------------------------------
     def admit(self, prompt_len: int, max_new: int) -> int:
         assert self.can_admit(prompt_len, max_new)
-        slot = self.free_slots.pop()
+        slot = self._fit_slot(self.pages_for(prompt_len + max_new))
+        self.free_slots.remove(slot)
+        shard = self.shard_of(slot)
         need = self.pages_for(prompt_len)
         for j in range(need):
-            self.block_table[slot, j] = self.free_pages.pop()
+            self.block_table[slot, j] = self._free[shard].pop()
         self._reserved[slot] = self.pages_for(prompt_len + max_new) - need
         self.lengths[slot] = prompt_len
         return slot
@@ -144,23 +203,28 @@ class PageAllocator:
         """Allocate the page holding position ``lengths[slot]`` (the next
         write) if the slot does not own it yet."""
         idx = int(self.lengths[slot]) // self.layout.page_size
-        if self.block_table[slot, idx] == NULL_PAGE:
-            self.block_table[slot, idx] = self.free_pages.pop()
+        if self.block_table[slot, idx] == self.null_page_of(slot):
+            self.block_table[slot, idx] = \
+                self._free[self.shard_of(slot)].pop()
             self._reserved[slot] -= 1
 
     def advance(self, slot: int):
         self.lengths[slot] += 1
 
     def free(self, slot: int):
-        """Evict: return the slot's pages to the free list."""
-        for j, page in enumerate(self.block_table[slot]):
-            if page != NULL_PAGE:
-                self.free_pages.append(int(page))
-        self.block_table[slot, :] = NULL_PAGE
+        """Evict: return the slot's pages to its shard's free list."""
+        null = self.null_page_of(slot)
+        shard = self.shard_of(slot)
+        for page in self.block_table[slot]:
+            if page != null:
+                self._free[shard].append(int(page))
+        self.block_table[slot, :] = null
         self.lengths[slot] = 0
         self._reserved[slot] = 0
         self.free_slots.append(slot)
 
     # -- stats --------------------------------------------------------------
     def pages_in_use(self) -> int:
-        return int((self.block_table != NULL_PAGE).sum())
+        nulls = np.array([self.null_page_of(s) for s in range(self.n_slots)],
+                         np.int32)
+        return int((self.block_table != nulls[:, None]).sum())

@@ -7,6 +7,14 @@ too long for the current free pages does not starve shorter ones behind
 it), then decodes every running slot in one fixed-shape step.  Finished
 requests are evicted immediately — their slot and pages go back on the
 free lists before the next admission pass.
+
+With ``prefill_chunk > 0`` a newly admitted request does not prefill in
+one shot: it joins the ``prefilling`` queue and the engine's *mixed*
+tick consumes up to ``prefill_chunk`` of its prompt tokens per tick
+(head of queue only — one admitting slot per tick) alongside the
+single-token decode of every fully prefilled slot.  ``Request.
+prefill_progress`` counts prompt tokens already written into the slot's
+pages; the request starts decoding the tick its last chunk lands.
 """
 from __future__ import annotations
 
@@ -14,13 +22,28 @@ import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.serve.paging import PageAllocator
 
 _rids = itertools.count(1)
 
 WAITING, RUNNING, FINISHED = "WAITING", "RUNNING", "FINISHED"
+
+
+class SubmitError(ValueError):
+    """A request the engine can never serve, with every reason.
+
+    Mirrors ``spec.workload.SpecError``: ``errors`` is a list of
+    ``{"field", "code", "message"}`` dicts so callers can render or
+    match on individual problems instead of parsing an assert string.
+    """
+
+    def __init__(self, errors: List[Dict[str, str]]):
+        self.errors = errors
+        lines = [f"  - {e['field']}: [{e['code']}] {e['message']}"
+                 for e in errors]
+        super().__init__("invalid request:\n" + "\n".join(lines))
 
 
 @dataclass
@@ -35,7 +58,9 @@ class Request:
     state: str = WAITING
     slot: Optional[int] = None
     tokens: List[int] = field(default_factory=list)   # generated so far
+    prefill_progress: int = 0        # prompt tokens already in the pages
     t_submit: float = field(default_factory=time.perf_counter)
+    t_admit: Optional[float] = None                   # left the queue
     t_first: Optional[float] = None                   # first-token time
     t_done: Optional[float] = None
 
@@ -49,27 +74,47 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, alloc: PageAllocator, max_prompt_len: int):
+    def __init__(self, alloc: PageAllocator, max_prompt_len: int,
+                 prefill_chunk: int = 0):
         self.alloc = alloc
         self.max_prompt_len = max_prompt_len
+        self.prefill_chunk = prefill_chunk
         self.waiting: Deque[Request] = deque()
+        self.prefilling: Deque[Request] = deque()    # admitted, mid-prefill
         self.running: Dict[int, Request] = {}        # slot -> request
         self.n_finished = 0
 
     def submit(self, req: Request) -> Request:
-        assert 1 <= len(req.prompt) <= self.max_prompt_len, \
-            f"prompt length {len(req.prompt)} exceeds capacity " \
-            f"{self.max_prompt_len}"
-        assert req.max_new_tokens >= 1
-        total = len(req.prompt) + req.max_new_tokens
-        cap = self.alloc.layout.pages_per_slot * self.alloc.layout.page_size
-        assert total <= cap, \
-            f"request needs {total} tokens; slot capacity is {cap}"
-        # pool capacity too, else an unservable request waits forever
-        usable = self.alloc.layout.n_pages - 1        # page 0 is the null page
-        assert self.alloc.pages_for(total) <= usable, \
-            f"request needs {self.alloc.pages_for(total)} pages; the pool " \
-            f"has {usable}"
+        errors: List[Dict[str, str]] = []
+
+        def err(field_, code, msg):
+            errors.append({"field": field_, "code": code, "message": msg})
+
+        if not 1 <= len(req.prompt) <= self.max_prompt_len:
+            err("prompt", "bad_length",
+                f"prompt length {len(req.prompt)} outside "
+                f"[1, {self.max_prompt_len}]")
+        if req.max_new_tokens < 1:
+            err("max_new_tokens", "too_small",
+                f"must be >= 1, got {req.max_new_tokens}")
+        if req.temperature < 0.0:
+            err("temperature", "negative",
+                f"must be >= 0, got {req.temperature}")
+        total = len(req.prompt) + max(req.max_new_tokens, 0)
+        lay = self.alloc.layout
+        cap = lay.pages_per_slot * lay.page_size
+        if total > cap:
+            err("max_new_tokens", "exceeds_slot",
+                f"request needs {total} tokens; slot capacity is {cap}")
+        # pool capacity too, else an unservable request waits forever; a
+        # request must fit inside ONE shard's pages (its slot's shard)
+        usable = lay.n_pages // self.alloc.n_shards - 1   # minus null page
+        if self.alloc.pages_for(total) > usable:
+            err("max_new_tokens", "exceeds_pool",
+                f"request needs {self.alloc.pages_for(total)} pages; "
+                f"each pool shard has {usable}")
+        if errors:
+            raise SubmitError(errors)
         self.waiting.append(req)
         return req
 
@@ -84,14 +129,45 @@ class Scheduler:
                 req.slot = self.alloc.admit(len(req.prompt),
                                             req.max_new_tokens)
                 req.state = RUNNING
+                req.t_admit = time.perf_counter()
                 self.running[req.slot] = req
                 admitted.append(req)
+                if self.prefill_chunk > 0:
+                    req.prefill_progress = 0
+                    self.prefilling.append(req)
+                else:
+                    req.prefill_progress = len(req.prompt)
             else:
                 skipped.append(req)
                 if not self.alloc.free_slots:
                     break
         self.waiting = skipped + self.waiting
         return admitted
+
+    # -- chunked prefill (mixed ticks) --------------------------------------
+    def next_chunk(self) -> Optional[Tuple[Request, int, int]]:
+        """The head prefilling request's next chunk of prompt work as
+        ``(req, start, n)``, capped by the per-tick chunk budget; None
+        when no slot is mid-prefill."""
+        if not self.prefilling:
+            return None
+        req = self.prefilling[0]
+        start = req.prefill_progress
+        return req, start, min(self.prefill_chunk, len(req.prompt) - start)
+
+    def chunk_done(self, req: Request, n: int) -> bool:
+        """Account ``n`` consumed prompt tokens; True when the request's
+        prefill just completed (it decodes from the next tick on)."""
+        req.prefill_progress += n
+        if req.prefill_progress >= len(req.prompt):
+            self.prefilling.popleft()
+            return True
+        return False
+
+    def decodable(self) -> Dict[int, Request]:
+        """Running slots whose prompt is fully in the pages."""
+        mid = {r.rid for r in self.prefilling}
+        return {s: r for s, r in self.running.items() if r.rid not in mid}
 
     def finish(self, req: Request):
         """Evict: free the slot and its pages for re-use."""

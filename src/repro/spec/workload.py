@@ -109,6 +109,8 @@ class ServeSpec:
     max_seq_len: int = 64
     n_pages: int = 0              # 0 -> every slot can reach max_seq_len
     n_requests: int = 2           # synthetic batch when no prompts given
+    prefill_chunk: int = 0        # >0: chunked prefill inside decode ticks
+    dp_shards: int = 1            # page-pool shards over the data tier
 
 
 @dataclass
@@ -287,9 +289,16 @@ class WorkloadSpec:
                       ("n_requests", s.n_requests)]:
             ok = _check_num(errs, f"serve.{f_}", v, 1) and ok
         ok = _check_num(errs, "serve.n_pages", s.n_pages, 0) and ok
+        ok = _check_num(errs, "serve.prefill_chunk", s.prefill_chunk, 0) \
+            and ok
+        ok = _check_num(errs, "serve.dp_shards", s.dp_shards, 1) and ok
         _check_num(errs, "serve.temperature", s.temperature, 0)
         if not ok:
             return errs                 # derived checks need sane values
+        if s.dp_shards > 1 and s.n_slots % s.dp_shards:
+            errs.append(_err("serve.dp_shards", "bad-value",
+                             f"dp_shards={s.dp_shards} must divide "
+                             f"n_slots={s.n_slots}"))
         if s.max_seq_len % s.page_size:
             errs.append(_err("serve.max_seq_len", "unaligned",
                              f"max_seq_len={s.max_seq_len} must be a "
@@ -334,4 +343,6 @@ class WorkloadSpec:
         return EngineConfig(n_slots=s.n_slots, page_size=s.page_size,
                             max_seq_len=s.max_seq_len,
                             max_prompt_len=s.max_prompt_len,
-                            n_pages=s.n_pages)
+                            n_pages=s.n_pages,
+                            prefill_chunk=s.prefill_chunk,
+                            dp_shards=s.dp_shards)

@@ -1,0 +1,13 @@
+"""XLA flag autotuning for the serving hot path.
+
+``flagsets`` names the candidate compiler-flag bundles (scoped vmem,
+windowed einsum, async collective fusion — the knobs that move decode
+and prefill rooflines on TPU); ``autotune`` sweeps them per
+(arch, mesh) cell, times the engine's jitted decode/prefill steps under
+each, and records the winner to ``TUNED_FLAGS.json`` keyed by
+``tune_key(arch, mesh)`` so launchers and benchmarks can load the tuned
+set instead of re-sweeping.
+"""
+from repro.tune.flagsets import FLAG_SETS, flags_env  # noqa: F401
+from repro.tune.autotune import (  # noqa: F401
+    TUNED_FLAGS, load_tuned, record, sweep, tune_key)

@@ -1,0 +1,51 @@
+"""Named XLA compiler-flag bundles for the serving sweep.
+
+Each set is a dict of XLA debug options (flag name -> value, both
+strings) — the spelling ``jax.jit(...).lower(...).compile(
+compiler_options=...)`` accepts, and also renderable as an
+``XLA_FLAGS`` environment string for cross-process application (the
+launcher sets the env var before the backend initializes).
+
+The bundles mirror the knobs production TPU serving stacks sweep:
+
+* ``scoped_vmem`` — hand the scheduler a bigger scoped-vmem budget so
+  fused decode kernels keep their working set on-chip;
+* ``windowed_einsum`` — overlap sharded matmul collectives with the
+  einsum they feed (helps tensor-parallel prefill);
+* ``async_collectives`` — let all-gathers/reduce-scatters run async and
+  fuse with surrounding ops (helps the data-tier page-pool exchange);
+* ``latency_bound`` — the latency-hiding scheduler with collective
+  overlap bounds tightened for small decode steps.
+
+No jax import here: flag *names* must be loadable by the launcher
+before any backend initialization.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+FLAG_SETS: Dict[str, Dict[str, str]] = {
+    "base": {},
+    "scoped_vmem": {
+        "xla_tpu_scoped_vmem_limit_kib": "65536",
+    },
+    "windowed_einsum": {
+        "xla_tpu_enable_windowed_einsum_for_all_gather": "true",
+        "xla_tpu_enable_windowed_einsum_for_reduce_scatter": "true",
+    },
+    "async_collectives": {
+        "xla_tpu_enable_async_collective_fusion": "true",
+        "xla_tpu_enable_async_collective_fusion_fuse_all_gather": "true",
+        "xla_tpu_overlap_compute_collective_tc": "true",
+    },
+    "latency_bound": {
+        "xla_tpu_enable_latency_hiding_scheduler": "true",
+        "xla_latency_hiding_scheduler_rerun": "1",
+    },
+}
+
+
+def flags_env(name: str) -> str:
+    """One flag set as an ``XLA_FLAGS`` fragment (empty for ``base``)."""
+    fs = FLAG_SETS[name]
+    return " ".join(f"--{k}={v}" for k, v in fs.items())

@@ -127,6 +127,64 @@ def test_paged_decode_pallas_matches_ref(h, hkv):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("h,hkv,start,valid",
+                         [(4, 2, 0, 8), (4, 2, 8, 8), (8, 8, 5, 3),
+                          (8, 1, 13, 8)])
+def test_paged_prefill_ref_matches_whole_prompt_oracle(h, hkv, start,
+                                                       valid):
+    """A chunk written at positions start..start+valid attends exactly
+    like the same rows of a whole-(prefix+chunk) flash pass over the
+    gathered pages."""
+    from repro.kernels.flash_attention import ref as fl_ref
+    b, page, maxp, d, chunk = 2, 8, 4, 32, 8
+    total = start + chunk
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    kp = jax.random.normal(ks[0], (16, page, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[1], (16, page, hkv, d), jnp.float32)
+    q = jax.random.normal(ks[2], (b, chunk, h, d), jnp.float32)
+    bt = np.zeros((b, maxp), np.int32)
+    nxt = 1
+    for r in range(b):
+        for j in range(-(-total // page)):
+            bt[r, j] = nxt
+            nxt += 1
+    bt = jnp.asarray(bt)
+    starts = jnp.full((b,), start, jnp.int32)
+    n_valid = jnp.full((b,), valid, jnp.int32)
+    out = dec_ref.paged_prefill_ref(q, kp, vp, bt, starts, n_valid)
+    kg = kp[bt].reshape(b, maxp * page, hkv, d)[:, :total]
+    vg = vp[bt].reshape(b, maxp * page, hkv, d)[:, :total]
+    # oracle: full causal flash over [0, total) with the chunk's q rows
+    qf = jnp.zeros((b, total, h, d), jnp.float32)
+    qf = qf.at[:, start:].set(q)
+    oracle = fl_ref.chunked(qf, kg, vg)[:, start:]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_pallas_matches_ref():
+    b, page, maxp, d, h, hkv, chunk = 2, 8, 4, 32, 4, 2, 8
+    start, valid = 5, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    kp = jax.random.normal(ks[0], (16, page, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[1], (16, page, hkv, d), jnp.float32)
+    q = jax.random.normal(ks[2], (b, chunk, h, d), jnp.float32)
+    bt = np.zeros((b, maxp), np.int32)
+    nxt = 1
+    for r in range(b):
+        for j in range(-(-(start + chunk) // page)):
+            bt[r, j] = nxt
+            nxt += 1
+    bt = jnp.asarray(bt)
+    starts = jnp.full((b,), start, jnp.int32)
+    n_valid = jnp.full((b,), valid, jnp.int32)
+    ref = dec_ref.paged_prefill_ref(q, kp, vp, bt, starts, n_valid)
+    out = ops.paged_prefill_attention(q, kp, vp, bt, starts, n_valid,
+                                      impl="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("rows,d", [(8, 64), (100, 128), (256, 32)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rmsnorm_pallas_matches_oracle(rows, d, dtype):

@@ -16,7 +16,7 @@ from repro.dist import sharding as shd
 from repro.dist.steps import PagedLayout
 from repro.models.model import Model
 from repro.serve import Engine, EngineConfig, PageAllocator, sample_tokens
-from repro.serve.scheduler import Request, Scheduler, WAITING
+from repro.serve.scheduler import Request, Scheduler, SubmitError, WAITING
 
 TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
                    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128)
@@ -106,11 +106,24 @@ def test_allocator_admission_is_length_aware():
 
 def test_submit_rejects_request_the_pool_can_never_hold():
     """A request that fits a slot but not the page pool must fail loudly
-    at submit, not wait forever."""
+    at submit — a structured SubmitError, not wait forever."""
     layout = PagedLayout(page_size=4, pages_per_slot=4, n_pages=4)
     sched = Scheduler(PageAllocator(2, layout), max_prompt_len=8)
-    with pytest.raises(AssertionError):
+    with pytest.raises(SubmitError) as exc:
         sched.submit(Request(prompt=[1] * 8, max_new_tokens=8))  # 4 > 3 pages
+    assert any(e["code"] == "exceeds_pool" for e in exc.value.errors)
+
+
+def test_submit_error_collects_every_problem():
+    """One SubmitError names every invalid field, SpecError-style."""
+    layout = PagedLayout(page_size=4, pages_per_slot=4, n_pages=4)
+    sched = Scheduler(PageAllocator(2, layout), max_prompt_len=8)
+    with pytest.raises(SubmitError) as exc:
+        sched.submit(Request(prompt=[], max_new_tokens=0, temperature=-1.0))
+    codes = {(e["field"], e["code"]) for e in exc.value.errors}
+    assert ("prompt", "bad_length") in codes
+    assert ("max_new_tokens", "too_small") in codes
+    assert ("temperature", "negative") in codes
 
 
 def test_scheduler_first_fit_skips_oversized_head():
@@ -297,6 +310,39 @@ class _ContiguousSampler:
             self.live[s]["tok"] = out[s] = int(toks[s])
         return out
 
+    def mixed(self, slots, req, final):
+        """One engine *mixed* tick (one key): decode ``slots`` plus, on
+        ``req``'s final chunk, its first token from a whole-prompt
+        contiguous prefill — the chunked engine's fused step samples the
+        admitting slot's row from the same tick's key."""
+        k = self._split()
+        logits = jnp.zeros((self.n_slots, self.cfg.vocab_size))
+        temps = np.zeros((self.n_slots,), np.float32)
+        for s in slots:
+            st = self.live[s]
+            row, st["cache"] = self.step_fn(
+                self.params, st["cache"],
+                jnp.asarray([[st["tok"]]], jnp.int32), jnp.int32(st["pos"]))
+            st["pos"] += 1
+            logits = logits.at[s].set(row[0])
+            temps[s] = st["temp"]
+        if final:
+            toks = np.zeros((1, self.cap), np.int32)
+            toks[0, :len(req.prompt)] = req.prompt
+            pl, cache = self.model.prefill(
+                self.params, {"tokens": jnp.asarray(toks)},
+                last_index=jnp.array([len(req.prompt) - 1]))
+            logits = logits.at[req.slot].set(pl[0])
+            temps[req.slot] = req.temperature
+            self.live[req.slot] = {"cache": cache,
+                                   "pos": len(req.prompt),
+                                   "tok": None, "temp": req.temperature}
+        toks_ = np.asarray(sample_tokens(logits, jnp.asarray(temps), k))
+        out = {}
+        for s in list(slots) + ([req.slot] if final else []):
+            self.live[s]["tok"] = out[s] = int(toks_[s])
+        return out
+
 
 def test_paged_matches_contiguous_at_temperature():
     """ISSUE satellite: the paged==contiguous invariant extended past
@@ -336,6 +382,207 @@ def test_paged_matches_contiguous_at_temperature():
     g1 = _contiguous_greedy(TINY, params, [1, 2, 3, 4, 5], 8)
     g2 = _contiguous_greedy(TINY, params, [7, 8, 9], 6)
     assert r1.tokens != g1 or r2.tokens != g2
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (mixed decode+prefill ticks)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [2, 3, 8], ids=["c2", "c3", "c8"])
+def test_chunked_prefill_greedy_identical_to_legacy(chunk):
+    """ISSUE acceptance (pinned invariant): with greedy sampling the
+    chunked engine's outputs are token-for-token identical to the
+    legacy prefill-then-decode engine — including a request admitted
+    mid-decode whose prompt trickles in across several mixed ticks."""
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(n_slots=2, page_size=4, max_seq_len=32,
+                        max_prompt_len=8, prefill_chunk=chunk)
+    eng = Engine(TINY, ecfg, params=params)
+    early = eng.submit([1, 2, 3, 4, 5], max_new_tokens=8)
+    eng.step()                              # first chunk (or whole prompt)
+    while eng.scheduler.prefilling:
+        eng.step()
+    eng.step()                              # early decodes
+    assert not early.finished and early.tokens
+    late = eng.submit([7, 8, 9, 10, 11, 12, 13], max_new_tokens=6)
+    eng.run()
+    assert early.tokens == _contiguous_greedy(TINY, params,
+                                              [1, 2, 3, 4, 5], 8)
+    assert late.tokens == _contiguous_greedy(
+        TINY, params, [7, 8, 9, 10, 11, 12, 13], 6)
+    assert eng.n_mixed_steps > 0
+
+
+def test_chunked_prefill_page_reuse_stays_correct():
+    """Evicted pages re-used by a chunked prefill still decode exactly:
+    the second request's chunks land on the first's recycled pages."""
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(n_slots=2, page_size=4, max_seq_len=16,
+                        max_prompt_len=8, n_pages=5,     # 4 usable pages
+                        prefill_chunk=2)
+    eng = Engine(TINY, ecfg, params=params)
+    r1 = eng.submit([1, 2, 3, 4, 5], max_new_tokens=4)  # 3 pages worst-case
+    r2 = eng.submit([7, 8, 9], max_new_tokens=4)        # needs 2 more
+    eng.step()
+    assert r1.state != WAITING and r2.state == WAITING
+    pages_r1 = {int(p) for p in eng.alloc.block_table[r1.slot] if p != 0}
+    eng.run()
+    assert r1.finished and r2.finished
+    assert r1.tokens == _contiguous_greedy(TINY, params,
+                                           [1, 2, 3, 4, 5], 4)
+    assert r2.tokens == _contiguous_greedy(TINY, params, [7, 8, 9], 4)
+    assert pages_r1, "first request must have held pages"
+
+
+def test_chunked_admission_mid_decode_at_temperature():
+    """ISSUE satellite: a request admitted mid-decode under chunked
+    prefill at temperature>0 — lockstep against the contiguous sampler
+    driven with the engine's exact key stream (mixed ticks consume one
+    key each, like any other tick)."""
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(n_slots=2, page_size=4, max_seq_len=32,
+                        max_prompt_len=8, prefill_chunk=2)
+    eng = Engine(TINY, ecfg, params=params, seed=3)
+    ref = _ContiguousSampler(TINY, params, ecfg.n_slots, seed=3)
+    expect = {}
+
+    def tick():
+        eng.scheduler.admit()
+        nxt = eng.scheduler.next_chunk()
+        if nxt is not None:
+            req, start, n = nxt
+            final = start + n >= len(req.prompt)
+            active = sorted(eng.scheduler.decodable())
+            reqs = dict(eng.scheduler.running)
+            eng._run_mixed(req, start, n)
+            for slot, tok in ref.mixed(active, req, final).items():
+                expect.setdefault(reqs[slot].rid, []).append(tok)
+        else:
+            active = sorted(eng.scheduler.running)
+            reqs = dict(eng.scheduler.running)
+            eng._run_decode()
+            for slot, tok in ref.decode(active).items():
+                expect.setdefault(reqs[slot].rid, []).append(tok)
+
+    r1 = eng.submit([1, 2, 3, 4, 5], max_new_tokens=8, temperature=0.9)
+    tick(); tick(); tick()           # 3 chunk ticks: prefill done + decode
+    tick()
+    assert not r1.finished and r1.tokens
+    r2 = eng.submit([7, 8, 9, 10, 11], max_new_tokens=6, temperature=1.7)
+    while eng.scheduler.has_work:
+        tick()
+    assert r1.finished and r2.finished
+    assert r1.tokens == expect[r1.rid][:len(r1.tokens)]
+    assert r2.tokens == expect[r2.rid][:len(r2.tokens)]
+    # temperature actually bites
+    g1 = _contiguous_greedy(TINY, params, [1, 2, 3, 4, 5], 8)
+    g2 = _contiguous_greedy(TINY, params, [7, 8, 9, 10, 11], 6)
+    assert r1.tokens != g1 or r2.tokens != g2
+
+
+def test_chunked_prefill_falls_back_for_seq_mixers():
+    """Seq-mixer recurrences cannot skip chunk padding: a hybrid engine
+    with prefill_chunk set must silently keep exact prefill-then-decode
+    and still match its reference."""
+    params = Model(TINY_HYBRID).init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(n_slots=2, page_size=4, max_seq_len=32,
+                        max_prompt_len=8, prefill_chunk=2)
+    eng = Engine(TINY_HYBRID, ecfg, params=params)
+    assert not eng._chunked
+    req = eng.submit([1, 2, 3, 4, 5], max_new_tokens=6)
+    eng.run()
+    assert req.tokens == _contiguous_greedy_exact(TINY_HYBRID, params,
+                                                  [1, 2, 3, 4, 5], 6)
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel page-pool sharding
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_allocator_keeps_pages_shard_local():
+    """Per-shard free lists: a slot only ever owns its shard's pages,
+    each shard has its own null page, and the elastic park/adopt
+    free-list round-trip (property assignment) survives sharding."""
+    layout = PagedLayout(page_size=4, pages_per_slot=4, n_pages=18,
+                         n_shards=2)
+    alloc = PageAllocator(4, layout)       # slots 0,1 -> shard 0; 2,3 -> 1
+    assert alloc.null_page_of(0) == 0 and alloc.null_page_of(2) == 9
+    assert (alloc.block_table[3] == 9).all()
+    s0 = alloc.admit(5, 3)                 # shard 0
+    s1 = alloc.admit(5, 3)
+    s2 = alloc.admit(5, 3)                 # must land on shard 1
+    assert {alloc.shard_of(s0), alloc.shard_of(s1)} == {0}
+    assert alloc.shard_of(s2) == 1
+    assert all(1 <= p <= 8 for p in alloc.block_table[s0, :2])
+    assert all(10 <= p <= 17 for p in alloc.block_table[s2, :2])
+    snap = list(alloc.free_pages)          # executor park path
+    alloc.free_pages = snap                # executor adopt path
+    assert list(alloc.free_pages) == snap
+    alloc.free(s2)
+    assert alloc.pages_in_use() == 4
+    # LIFO within the shard: s2's pages come back first on shard 1
+    s3 = alloc.admit(8, 0)
+    assert alloc.shard_of(s3) == 1
+
+
+def test_sharded_allocator_admission_is_shard_aware():
+    """A request that no single shard can hold is not admitted even if
+    the pool-wide free count would fit it."""
+    layout = PagedLayout(page_size=4, pages_per_slot=4, n_pages=8,
+                         n_shards=2)                  # 3 usable pages/shard
+    alloc = PageAllocator(2, layout)
+    alloc.admit(8, 0)          # 2 pages on shard 0 -> 1 left there
+    assert not alloc.can_admit(12, 4)    # 4 pages: neither shard has them
+    assert alloc.can_admit(8, 4)         # 3 pages: shard 1 still can
+
+
+def test_paged_matches_contiguous_dp_sharded_pool():
+    """ISSUE acceptance: paged==contiguous greedy parity holds with the
+    page pool and block table sharded over the data axis of a (2, 4)
+    mesh — legacy and chunked engines both."""
+    mesh = _mesh_2x4()
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3, 4, 5], [7, 8, 9], [11, 12, 13, 14], [2, 4]]
+    want = [_contiguous_greedy(TINY, params, p, 5) for p in prompts]
+    for chunk in (0, 3):
+        eng = Engine(TINY, EngineConfig(n_slots=4, page_size=4,
+                                        max_seq_len=32, max_prompt_len=8,
+                                        dp_shards=2, prefill_chunk=chunk),
+                     strategy=BASELINE, mesh=mesh, params=params)
+        assert eng.layout.n_shards == 2
+        reqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        eng.run()
+        assert [r.tokens for r in reqs] == want, f"chunk={chunk}"
+
+
+# ---------------------------------------------------------------------------
+# Prefill compile cache (LRU)
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_compile_cache_is_lru_bounded():
+    """Seq-mixer archs compile per exact prompt length; the LRU cap
+    bounds that and the stats surface hits/misses/evictions."""
+    params = Model(TINY_HYBRID).init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(n_slots=2, page_size=4, max_seq_len=32,
+                        max_prompt_len=8, prefill_cache_cap=2)
+    eng = Engine(TINY_HYBRID, ecfg, params=params)
+    for plen in (2, 3, 4, 2):       # 4 evicts 2 (LRU), then 2 recompiles
+        req = eng.submit(list(range(1, plen + 1)), max_new_tokens=2)
+        eng.run()
+        assert req.finished
+    pc = eng.stats()["prefill_cache"]
+    assert pc["size"] <= 2 and pc["cap"] == 2
+    assert pc["misses"] == 4 and pc["evictions"] >= 2 and pc["hits"] == 0
+    # attention archs share ONE padded compile: all hits after the first
+    eng2 = Engine(TINY, ecfg, params=Model(TINY).init(jax.random.PRNGKey(0)))
+    for plen in (2, 3, 4):
+        eng2.submit(list(range(1, plen + 1)), max_new_tokens=2)
+    eng2.run()
+    pc2 = eng2.stats()["prefill_cache"]
+    assert pc2["misses"] == 1 and pc2["hits"] == 2
 
 
 # ---------------------------------------------------------------------------
