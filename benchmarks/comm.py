@@ -1,13 +1,22 @@
-"""Comm-layer benchmark: flat vs hierarchical vs hierarchical+int8.
+"""Comm-layer benchmark: sync schedules, backward overlap, MoE a2a.
 
-Runs the SAME tiny train job under three gradient-sync schedules on the
+Runs the SAME tiny train job under four gradient-sync schedules (flat,
+hierarchical, hierarchical bucketed x4, hierarchical+int8) on the
 forced-8-device ``(pod=2, data=2, model=2)`` mesh and records, per
 schedule, the measured step time and the topology model's estimate of
 bytes crossing the pod boundary (``comm.estimate_sync_bytes`` over the
-padded gradient payload).  The claim the JSON pins: the int8
-error-feedback schedule moves STRICTLY fewer estimated cross-pod bytes
-than the uncompressed hierarchical schedule, which in turn moves fewer
-than the topology-unaware flat ring.
+padded gradient payload).  Claims the JSON pins:
+
+* sync bytes: int8 moves STRICTLY fewer estimated cross-pod bytes than
+  uncompressed hierarchical, which moves fewer than the flat ring;
+* overlap (``comm.schedule_overlap`` event model over the bucketed
+  timeline): the bucketed schedule hides >= 50% of its cross-pod time
+  behind backward, and its modeled step time never exceeds the
+  unbucketed schedule's;
+* MoE a2a (``comm.estimate_a2a_bytes``): hierarchical dispatch moves
+  STRICTLY fewer cross-pod bytes than the flat all-to-all.
+
+Any claim failing aborts the run (the CI smoke goes red).
 
 Standalone (the CI comm smoke):
 
@@ -79,10 +88,15 @@ def main(emit, smoke: bool = False):
     topo = comm.CommTopology.from_mesh(mesh)
     block = 256
 
+    n_buckets = 4
+
     schedules = {
         "flat": ShardingStrategy(name="flat"),
         "hierarchical": ShardingStrategy(
             name="hier", hierarchical_collectives=True),
+        "hierarchical_bucketed": ShardingStrategy(
+            name="hier-b4", hierarchical_collectives=True,
+            comm_buckets=n_buckets),
         "hierarchical_int8": ShardingStrategy(
             name="hier-int8", hierarchical_collectives=True,
             compress_cross_pod=True, compress_pods=2,
@@ -90,7 +104,8 @@ def main(emit, smoke: bool = False):
     }
 
     n_elems = _padded_grad_elems(cfg, topo.data_size, block)
-    section = {"mesh": dict(mesh.shape), "grad_elems_padded": n_elems}
+    section = {"backend": jax.default_backend(), "mesh": dict(mesh.shape),
+               "grad_elems_padded": n_elems}
     losses = {}
     for name, strat in schedules.items():
         jitted, sshard, bshard = dsteps.jit_train_step(
@@ -117,7 +132,7 @@ def main(emit, smoke: bool = False):
             "final_loss": losses[name],
             "cross_pod_bytes": est["cross_pod_bytes"],
             "cross_pod_per_link": est["cross_pod_per_link"],
-            "cross_pod_time_s": est["cross_pod_time_s"],
+            "est_cross_pod_time_s": est["est_cross_pod_time_s"],
         }
         emit(f"comm_{name}_step", dt * 1e6,
              f"{est['cross_pod_bytes'] / 1e6:.2f} MB est. cross-pod "
@@ -130,23 +145,82 @@ def main(emit, smoke: bool = False):
     section["claims"] = {
         "hier_fewer_cross_pod_bytes_than_flat": hier_b < flat_b,
         "int8_fewer_cross_pod_bytes_than_hier": int8_b < hier_b,
+        "bucketed_loss_matches_hier": abs(
+            losses["hierarchical_bucketed"] - losses["hierarchical"])
+            <= 1e-6,
         "losses_finite": all(np.isfinite(v) for v in losses.values()),
     }
     if not all(section["claims"].values()):
         raise SystemExit(f"comm bench claim check failed: "
                          f"{section['claims']}")
 
+    # ---- overlap: event-model schedule of the bucketed cross-pod sync.
+    # backward_s is MODELED (a fixed share of the measured hierarchical
+    # step), stamped so the numbers read as estimates, not measurements.
+    from repro.models.model import Model
+    defs = Model(cfg).param_defs()
+    bw_share = 0.6
+    backward_s = section["hierarchical"]["step_time_s"] * bw_share
+    overlap = {"backend": jax.default_backend(), "mesh": dict(mesh.shape),
+               "backward_share_of_step": bw_share, "backward_s": backward_s}
+    for label, nb, compress in (("unbucketed", 1, False),
+                                ("bucketed", n_buckets, False),
+                                ("bucketed_int8", n_buckets, True)):
+        sched = comm.schedule_overlap(
+            topo, comm.partition_buckets(defs, nb),
+            backward_s=backward_s, compress=compress, block=block)
+        overlap[label] = comm.overlap.summarize(sched)
+        emit(f"comm_overlap_{label}", sched.step_time_s * 1e6,
+             f"hidden {sched.hidden_frac * 100:.0f}% of "
+             f"{sched.cross_pod_s * 1e6:.0f}us cross-pod")
+    overlap["claims"] = {
+        "bucketed_hides_half_of_cross_pod":
+            overlap["bucketed"]["hidden_frac"] >= 0.5,
+        "bucketed_step_le_unbucketed":
+            overlap["bucketed"]["modeled_step_time_s"]
+            <= overlap["unbucketed"]["modeled_step_time_s"],
+    }
+    if not all(overlap["claims"].values()):
+        raise SystemExit(f"comm overlap claim check failed: "
+                         f"{overlap['claims']}")
+
+    # ---- MoE a2a: hierarchical dispatch vs flat all-to-all pricing
+    # (matches the tiny-MoE regime tests/test_moe.py pins: 8 experts
+    # top-2 over 2 pods, capacity factor 1.25)
+    n_tokens = shape.global_batch * shape.seq_len
+    moe_kw = dict(n_tokens=n_tokens, d_model=cfg.d_model,
+                  n_experts=8, top_k=2,
+                  capacity=int(n_tokens * 2 * 1.25 // 8))
+    a2a_flat = comm.estimate_a2a_bytes(topo, hierarchical=False, **moe_kw)
+    a2a_hier = comm.estimate_a2a_bytes(topo, hierarchical=True, **moe_kw)
+    moe_a2a = {"backend": jax.default_backend(), "mesh": dict(mesh.shape),
+               **{f"{k}": v for k, v in moe_kw.items()},
+               "flat": a2a_flat, "hierarchical": a2a_hier,
+               "claims": {"hier_fewer_a2a_cross_pod_bytes_than_flat":
+                          a2a_hier["cross_pod_bytes"]
+                          < a2a_flat["cross_pod_bytes"]}}
+    if not all(moe_a2a["claims"].values()):
+        raise SystemExit(f"comm moe_a2a claim check failed: "
+                         f"{moe_a2a['claims']}")
+    emit("comm_moe_a2a", a2a_hier["est_cross_pod_time_s"] * 1e6,
+         f"hier a2a {a2a_hier['cross_pod_bytes'] / 1e6:.2f} MB cross-pod "
+         f"vs flat {a2a_flat['cross_pod_bytes'] / 1e6:.2f} MB")
+
     out = {}
     if os.path.exists(OUT_JSON):
         with open(OUT_JSON) as f:
             out = json.load(f)
     out["comm"] = section
+    out["overlap"] = overlap
+    out["moe_a2a"] = moe_a2a
     with open(OUT_JSON, "w") as f:
         json.dump(out, f, indent=2)
     emit("comm_json", 0.0,
          f"wrote {OUT_JSON}; int8 saves "
          f"{(1 - int8_b / hier_b) * 100:.0f}% cross-pod bytes vs hier, "
-         f"hier saves {(1 - hier_b / flat_b) * 100:.0f}% vs flat")
+         f"hier saves {(1 - hier_b / flat_b) * 100:.0f}% vs flat, "
+         f"bucketed overlap hides "
+         f"{overlap['bucketed']['hidden_frac'] * 100:.0f}% of DCN time")
 
 
 if __name__ == "__main__":

@@ -15,16 +15,32 @@ operator schedules:
 * ``compress``    — int8 per-block-scale quantization with
                     error-feedback residuals on the cross-pod phase,
                     the residual living in the train state so
-                    checkpoint/remesh carry it.
+                    checkpoint/remesh carry it;
+* ``bucketing``   — partition the param tree into ~byte-balanced
+                    buckets in reverse-layer order, so each bucket's
+                    cross-pod phase launches as soon as backward
+                    finalizes its gradients;
+* ``overlap``     — event-model schedule pricing how much of the
+                    bucketed DCN time hides behind backward compute
+                    (the ``hidden_frac`` claim in BENCH_comm.json).
 """
-from repro.comm import collectives, compress, topology  # noqa: F401
+from repro.comm import (  # noqa: F401
+    bucketing, collectives, compress, overlap, topology,
+)
+from repro.comm.bucketing import (  # noqa: F401
+    GradBucket, partition_buckets,
+)
 from repro.comm.collectives import (  # noqa: F401
     CommFallbackWarning, CommPolicy, CommTopologyError, degrade,
     ef_shardings, grad_rules, resolve_policy, sync_grads,
+    sync_grads_bucketed,
 )
 from repro.comm.compress import (  # noqa: F401
     EF_POD_AXIS, compress_payload, ef_defs,
 )
+from repro.comm.overlap import (  # noqa: F401
+    OverlapSchedule, schedule_overlap,
+)
 from repro.comm.topology import (  # noqa: F401
-    CommTopology, estimate_sync_bytes, payload_bytes,
+    CommTopology, estimate_a2a_bytes, estimate_sync_bytes, payload_bytes,
 )

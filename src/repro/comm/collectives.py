@@ -69,13 +69,23 @@ class CommPolicy:
     compress: bool = False
     block: int = 256
     pods: int = 0                  # compression schema rows (strategy)
+    buckets: int = 1               # sync buckets (1 = monolithic)
 
 
-def degrade(strategy: ShardingStrategy, why: str) -> None:
+def degrade(strategy: ShardingStrategy, why: str, mesh=None) -> None:
     """Flat-sync fallback: warn once per step build, or raise under
-    ``comm_strict`` — the silent-no-op failure mode is pinned out."""
+    ``comm_strict`` — the silent-no-op failure mode is pinned out.
+
+    The warning MESSAGE carries the mesh axis-shape: the warnings
+    registry dedups on message text, so an elastic remesh onto a
+    *different* degraded mesh re-warns instead of being swallowed by
+    the first mesh's warning (two distinct degradations are two
+    warnings; rebuilding on the SAME mesh stays deduped).
+    """
     msg = (f"comm: strategy {strategy.name!r} requested hierarchical/"
            f"compressed gradient sync but {why}; falling back to flat sync")
+    if mesh is not None:
+        msg += f" [mesh={dict(mesh.shape)}]"
     if strategy.comm_strict:
         raise CommTopologyError(msg)
     warnings.warn(msg, CommFallbackWarning, stacklevel=3)
@@ -88,17 +98,18 @@ def resolve_policy(strategy: ShardingStrategy, mesh) -> CommPolicy:
     topo = CommTopology.from_mesh(mesh)
     if not topo.has_pod_tier:
         degrade(strategy, "the mesh has no pod tier (axis 'pod' missing "
-                f"or size 1 in {dict(mesh.shape)})")
+                f"or size 1)", mesh=mesh)
         return CommPolicy()
     compress = bool(strategy.compress_cross_pod)
     if compress and topo.pod_size != strategy.compress_pods:
         degrade(strategy, f"the mesh pod tier ({topo.pod_size}) does not "
                 f"match strategy.compress_pods ({strategy.compress_pods}) "
-                "— the error-feedback schema is strategy-sized")
+                "— the error-feedback schema is strategy-sized", mesh=mesh)
         compress = False
     return CommPolicy(hierarchical=True, compress=compress,
                       block=strategy.compress_block,
-                      pods=strategy.compress_pods)
+                      pods=strategy.compress_pods,
+                      buckets=max(int(strategy.comm_buckets), 1))
 
 
 # --------------------------------------------------------------------------
@@ -106,12 +117,27 @@ def resolve_policy(strategy: ShardingStrategy, mesh) -> CommPolicy:
 # --------------------------------------------------------------------------
 
 
+def _no_pod(rule):
+    if rule is None:
+        return None
+    t = rule if isinstance(rule, tuple) else (rule,)
+    t = tuple(a for a in t if a != "pod")
+    return t[0] if len(t) == 1 else (t or None)
+
+
 def grad_rules(strategy: ShardingStrategy):
     """Rule table for the comm layer's trees.  The stacked chunk dim
     owns the data-parallel axes and the residual's leading dim owns
     ``pod``; trailing dims keep only tensor/expert axes (a ZeRO-3
-    ``embed -> data`` rule would collide with the chunk dim)."""
-    rules = dict(shd.param_rules(strategy))
+    ``embed -> data`` rule would collide with the chunk dim).  ``pod``
+    is stripped from every param rule for the same reason: a
+    ``hierarchical_moe`` expert rule of ``("pod", "model")`` would be
+    silently truncated on the chunk-stacked INPUT (the chunk dim
+    already holds pod) but kept on the chunk-free OUTPUT spec, and the
+    mismatched local shapes make shard_map mis-concatenate the expert
+    dim.  Phase 2 psums over ``pod`` anyway, so synced gradients are
+    pod-replicated by construction."""
+    rules = {k: _no_pod(v) for k, v in shd.param_rules(strategy).items()}
     rules["embed"] = None
     rules[DP_CHUNK_AXIS] = shd.DATA_AXES
     rules[efc.EF_POD_AXIS] = "pod"
@@ -232,3 +258,45 @@ def sync_grads(stacked, defs, mesh, policy: CommPolicy,
         body, mesh=mesh, in_specs=(in_g, in_e), out_specs=(out_g, in_e),
         check_rep=False)(stacked, residual)
     return synced, new_ef
+
+
+# --------------------------------------------------------------------------
+# Bucketed sync: one two-phase schedule per bucket, reverse-layer order
+# --------------------------------------------------------------------------
+
+
+def sync_grads_bucketed(stacked, defs, mesh, policy: CommPolicy,
+                        strategy: ShardingStrategy, residual=None):
+    """:func:`sync_grads`, issued as ``policy.buckets`` independent
+    collectives in reverse-layer order.
+
+    Backward finalizes deep layers' gradients first, so emitting the
+    deep buckets' cross-pod phase as its OWN collective — instead of
+    one monolithic sync over the whole tree — lets the runtime overlap
+    DCN transfers with the still-running shallow backward (async
+    dispatch on real hardware; ``comm.overlap.schedule_overlap`` prices
+    the hidden fraction for the simulator/bench).  The reduction per
+    leaf is untouched, so the result is numerically interchangeable
+    with the monolithic sync for every bucket count, and per-bucket EF
+    residuals are just path-slices of the one strategy-schema'd
+    residual tree — checkpoints and elastic remesh see no difference.
+    """
+    from repro.comm import bucketing
+
+    if policy.buckets <= 1:
+        return sync_grads(stacked, defs, mesh, policy, strategy,
+                          residual=residual)
+    buckets = bucketing.partition_buckets(defs, policy.buckets)
+    d_sub = bucketing.bucket_subtrees(defs, defs, buckets)
+    g_sub = bucketing.bucket_subtrees(stacked, defs, buckets)
+    e_sub = (bucketing.bucket_subtrees(residual, defs, buckets)
+             if residual is not None else [None] * len(buckets))
+    g_out, e_out = [], []
+    for db, gb, eb in zip(d_sub, g_sub, e_sub):
+        g, e = sync_grads(gb, db, mesh, policy, strategy, residual=eb)
+        g_out.append(g)
+        e_out.append(e)
+    synced = bucketing.unbucket_leaves(g_out, defs, buckets)
+    if residual is None:
+        return synced, residual
+    return synced, bucketing.unbucket_leaves(e_out, defs, buckets)

@@ -116,7 +116,7 @@ def estimate_sync_bytes(topo: CommTopology, n_elems: int, *,
         # no pod boundary: every schedule degenerates to intra-pod
         out.update(cross_pod_bytes=0.0, cross_pod_per_link=0.0,
                    intra_pod_bytes=2.0 * fp32 * (R - 1),
-                   cross_pod_time_s=0.0)
+                   est_cross_pod_time_s=0.0)
         return out
     if not hierarchical:
         per_edge = 2.0 * fp32 * (R - 1) / R
@@ -131,6 +131,54 @@ def estimate_sync_bytes(topo: CommTopology, n_elems: int, *,
         # reduce-scatter + all-gather inside each pod, fp32
         out["intra_pod_bytes"] = 2.0 * fp32 * (D - 1) / D * P
     t = topo.tier("pod")
-    out["cross_pod_time_s"] = (out["cross_pod_per_link"] / t.bandwidth
-                               + 2.0 * (P - 1) * t.latency)
+    # bandwidth-model estimate, NOT a measurement (hence the est_ prefix
+    # everywhere this number surfaces, BENCH_comm.json included)
+    out["est_cross_pod_time_s"] = (out["cross_pod_per_link"] / t.bandwidth
+                                   + 2.0 * (P - 1) * t.latency)
+    return out
+
+
+def estimate_a2a_bytes(topo: CommTopology, *, n_tokens: int, d_model: int,
+                       n_experts: int, capacity: int, top_k: int,
+                       hierarchical: bool,
+                       bytes_per_elem: float = 2.0) -> Dict[str, float]:
+    """Price one MoE dispatch+combine against the pod tier.
+
+    Both schedules assume experts sharded across the ``pod`` tier
+    (``expert -> (pod, model)``, the hierarchical-MoE weight rule — the
+    regime where expert weights no longer fit one pod replicated).
+
+    *Flat* is the topology-unaware lowering today's combine produces:
+    an all-gather of EVERY expert's capacity slots across all pods
+    (each of ``P`` pods receives the other ``P-1`` pods' full
+    ``n_experts * capacity`` slot block) — dispatch mirrored, so the
+    payload crosses the DCN boundary twice.
+
+    *Hierarchical* routes pod-locally and exchanges cross-pod only the
+    tokens whose expert lives in another pod: with experts partitioned
+    pod-major and balanced routing, an expected ``(P-1)/P`` of the
+    ``n_tokens * top_k`` chosen (token, expert) rows — never the full
+    slot grid, and never slots capacity already dropped.
+    """
+    P = topo.pod_size
+    out: Dict[str, float] = {
+        "n_tokens": float(n_tokens), "d_model": float(d_model),
+        "pod": float(P)}
+    row = bytes_per_elem * d_model
+    if P <= 1:
+        out.update(cross_pod_bytes=0.0, cross_pod_per_link=0.0,
+                   est_cross_pod_time_s=0.0)
+        return out
+    if not hierarchical:
+        # all-gather of the full (n_experts * capacity) slot grid to
+        # every other pod, for dispatch AND combine
+        total = 2.0 * n_experts * capacity * row * (P - 1)
+    else:
+        # only remote-expert token rows ride DCN (twice: there + back)
+        total = 2.0 * n_tokens * top_k * row * (P - 1) / P
+    t = topo.tier("pod")
+    out["cross_pod_bytes"] = total
+    out["cross_pod_per_link"] = total / P
+    out["est_cross_pod_time_s"] = (out["cross_pod_per_link"] / t.bandwidth
+                                   + 2.0 * (P - 1) * t.latency)
     return out

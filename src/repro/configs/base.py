@@ -283,6 +283,18 @@ class ShardingStrategy:
     compress_pods: int = 2
     # contiguous fp32 elements per int8 scale (quantization block)
     compress_block: int = 256
+    # number of gradient-sync buckets (1 = one monolithic sync after
+    # the full backward).  >1 partitions the param tree into
+    # ~byte-balanced buckets in REVERSE-layer order and launches each
+    # bucket's cross-pod phase as soon as its gradients are final, so
+    # DCN time hides behind the remaining backward compute (see
+    # repro/comm/bucketing.py and repro/comm/overlap.py)
+    comm_buckets: int = 1
+    # hierarchical MoE dispatch: shard experts over the pod tier too
+    # (``expert`` -> (pod, model)) and route dispatch/combine as
+    # pod-local exchange + cross-pod transfer of only the tokens whose
+    # expert lives in another pod (see models/moe.py)
+    hierarchical_moe: bool = False
     # error instead of falling back to flat sync when the mesh cannot
     # honor the requested comm schedule (no pod tier, pod mismatch)
     comm_strict: bool = False

@@ -42,6 +42,12 @@ def act_rules(strategy: ShardingStrategy) -> Dict[str, Rule]:
         "act_ff": tp,
         "act_vocab": tp,
         "act_expert": "model" if strategy.expert_parallel else None,
+        # hierarchical MoE: the expert HOME dim (which pod owns the
+        # expert) shards over the pod tier; the resolver then keeps
+        # ``act_batch`` off ``pod`` in the same spec (axis used once),
+        # which is exactly the dispatched layout — tokens moved to
+        # their expert's pod, batch sharded over data only
+        "act_expert_home": "pod" if strategy.hierarchical_moe else None,
         "act_inner": tp,
     }
 

@@ -83,13 +83,24 @@ def param_rules(strategy: ShardingStrategy) -> Dict[str, Rule]:
             else ("data", "model")
     else:
         embed = None
+    if not strategy.expert_parallel:
+        expert: Rule = None
+    elif strategy.hierarchical_moe:
+        # experts span the pod tier too (pod-major), so each pod holds
+        # only n_experts/P expert weights and MoE dispatch has a
+        # cross-pod hop to schedule (models/moe.py routes it
+        # hierarchically); on a pod-less mesh this resolves back to
+        # plain model-axis expert parallelism
+        expert = ("pod", "model")
+    else:
+        expert = "model"
     return {
         "embed": embed,
         "heads": tp,
         "kv_heads": tp,
         "ff": tp,
         "vocab": tp,
-        "expert": "model" if strategy.expert_parallel else None,
+        "expert": expert,
         "mamba_in": tp,
         "xl_in": tp,
         "xl_heads": tp,

@@ -124,7 +124,10 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     gradients STACKED (one chunk per data-parallel shard, pod-major)
     instead of letting the partitioner emit a flat all-reduce, and the
     two-phase schedule — plus optional int8 error-feedback compression
-    on the cross-pod hop — reduces them to the same mean.  Otherwise
+    on the cross-pod hop — reduces them to the same mean.  With
+    ``strategy.comm_buckets > 1`` the sync is emitted as one collective
+    per reverse-layer bucket (``comm.sync_grads_bucketed``) so cross-pod
+    transfers of deep layers overlap the shallow backward.  Otherwise
     the flat path below runs unchanged (``resolve_policy`` already
     warned, once, if the strategy asked for more than the mesh offers).
     """
@@ -139,7 +142,7 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     if policy.hierarchical and shape.global_batch % n_chunks != 0:
         comm.degrade(strategy, f"global batch {shape.global_batch} does "
                      f"not divide into {n_chunks} chunks "
-                     f"(grad_accum={ga} x dp={dp_world})")
+                     f"(grad_accum={ga} x dp={dp_world})", mesh=mesh)
         policy = comm.CommPolicy()
 
     def loss_fn(p, mb):
@@ -196,7 +199,12 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             ms = {k: v / ga for k, v in msum.items()}
         residual = (state["comm"]["ef"]
                     if policy.compress and "comm" in state else None)
-        grads, new_ef = comm.sync_grads(
+        # one collective per bucket, reverse-layer order, so each
+        # bucket's cross-pod phase is dispatched as soon as backward
+        # finalized its gradients (comm_buckets == 1: monolithic sync)
+        sync = (comm.sync_grads_bucketed if policy.buckets > 1
+                else comm.sync_grads)
+        grads, new_ef = sync(
             stacked, model.param_defs(), mesh, policy, strategy,
             residual=residual)
         metrics = {k: jnp.mean(ms[k]) for k in METRIC_KEYS}

@@ -10,6 +10,18 @@ hierarchical work distribution.
 
 Logical axes: "expert" shards over the model axis; expert-internal dims
 stay local.
+
+**Hierarchical dispatch** (``strategy.hierarchical_moe`` on a pod-tier
+mesh): experts additionally shard over the ``pod`` tier (pod-major, so
+expert ``e``'s HOME pod is ``e // (E/P)``) and the flat all-to-all is
+routed as two stages — a pod-local combine for tokens whose expert
+lives in their own pod, plus a cross-pod exchange carrying ONLY the
+remote-expert rows (the transported tensor is masked to zero every
+pod-local slot before it moves, so nothing a pod already has rides the
+DCN links; ``comm.estimate_a2a_bytes`` prices exactly that split).
+The two-stage combine selects the same slot rows as the flat gather,
+so the output is numerically identical — capacity drops included
+(pinned by tests/test_moe.py).
 """
 from __future__ import annotations
 
@@ -19,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.dist.actsharding import constrain
+from repro.dist.actsharding import constrain, current
 from repro.models.params import PDef
 
 
@@ -42,6 +54,101 @@ def moe_defs(cfg: ModelConfig):
 def _capacity(m_tokens: int, mc) -> int:
     c = int(-(-m_tokens * mc.top_k * mc.capacity_factor // mc.n_experts))
     return max(c, 1)
+
+
+def _hier_homes(e: int, g: int) -> int:
+    """Number of expert HOME pods for hierarchical dispatch (1 = flat).
+
+    Active only inside an activation-sharding context whose strategy
+    asks for it, on a mesh with a real pod tier, and when experts and
+    groups both split evenly across pods; anything else falls back to
+    the flat all-to-all (same outputs either way).
+    """
+    ctx = current()
+    if ctx is None:
+        return 1
+    st = ctx.strategy
+    if not (st.hierarchical_moe and st.expert_parallel):
+        return 1
+    pods = int(dict(ctx.mesh.shape).get("pod", 1))
+    if pods <= 1 or e % pods or g % pods:
+        return 1
+    return pods
+
+
+def _hier_ffn_combine(p, xin, slot_used, expert_idx, pos, keep, homes):
+    """Expert FFN + combine with pod-local dispatch and a cross-pod
+    exchange of ONLY the remote-expert rows.
+
+    ``xin`` is the unmasked (e, g, c, d) dispatch; experts are pod-major
+    (expert ``e``'s home pod is ``e // e_loc``), so reshaping the expert
+    dim to (home, e_loc) puts the home dim on the pod tier and the block
+    einsums below run pod-locally.  The combine then splits: each group
+    first reads its OWN pod's slot block (stage 1, no DCN), and the
+    exchanged tensor for stage 2 has every pod-local slot zeroed before
+    it moves, so the DCN hop carries exactly the tokens whose expert
+    lives in another pod.  Because the {local, remote} masks partition
+    each kept (token, choice), stage1 + stage2 selects the same slot
+    rows as the flat gather — output-identical, capacity drops included.
+    """
+    e, g, c, d = xin.shape
+    dt = xin.dtype
+    e_loc = e // homes
+    s = e_loc * c                                  # slots per home pod
+    xh = xin.reshape(homes, e_loc, g, c, d)
+    xh = constrain(xh, "act_expert_home", "act_expert", "act_batch",
+                   None, None)
+    used = slot_used.transpose(1, 0, 2).reshape(homes, e_loc, g, c)
+    xh = xh * used[..., None].astype(dt)
+
+    w_in = p["w_in"].astype(dt).reshape(homes, e_loc, d, -1)
+    h = jnp.einsum("hegcd,hedf->hegcf", xh, w_in)
+    h = constrain(h, "act_expert_home", "act_expert", "act_batch",
+                  None, None)
+    if "w_gate" in p:
+        w_g = p["w_gate"].astype(dt).reshape(homes, e_loc, d, -1)
+        gt = jnp.einsum("hegcd,hedf->hegcf", xh, w_g)
+        gt = constrain(gt, "act_expert_home", "act_expert", "act_batch",
+                       None, None)
+        h = jax.nn.silu(gt) * h
+    else:
+        h = jax.nn.gelu(h)
+    w_out = p["w_out"].astype(dt).reshape(homes, e_loc, -1, d)
+    yh = jnp.einsum("hegcf,hefd->hegcd", h, w_out)
+    yh = constrain(yh, "act_expert_home", "act_expert", "act_batch",
+                   None, None)
+
+    # (home, g, e_loc*c, d): each pod's slot block, the combine source
+    y_h = yh.transpose(0, 2, 1, 3, 4).reshape(homes, g, s, d)
+    y_h = constrain(y_h, "act_expert_home", "act_batch", None, None)
+
+    m, k = expert_idx.shape[1], expert_idx.shape[2]
+    pg = jnp.arange(g) // (g // homes)             # each group's own pod
+    h_idx = expert_idx // e_loc                    # g m k: expert's home
+    s_idx = (expert_idx % e_loc) * c + pos         # g m k: slot in home
+    local = h_idx == pg[:, None, None]
+
+    # stage 1: pod-local combine — groups read only their own pod's block
+    y_own = jnp.take_along_axis(y_h, pg.reshape(1, g, 1, 1), axis=0)[0]
+    y_own = constrain(y_own, "act_batch", None, None)
+    l_idx = jnp.where(local & keep, s_idx, 0)
+    got_l = jnp.take_along_axis(
+        y_own, l_idx.reshape(g, m * k)[..., None], axis=1)
+    got_l = got_l.reshape(g, m, k, d) * local[..., None].astype(dt)
+
+    # stage 2: cross-pod exchange — zero every pod-local slot first, so
+    # the exchanged tensor carries only remote-expert rows over DCN
+    own = jnp.arange(homes)[:, None] == pg[None, :]          # homes g
+    y_rem = y_h * (~own)[..., None, None].astype(dt)
+    y_rem = y_rem.transpose(1, 0, 2, 3).reshape(g, homes * s, d)
+    y_rem = constrain(y_rem, "act_batch", None, None)        # the a2a hop
+    r_idx = jnp.where((~local) & keep, h_idx * s + s_idx, 0)
+    got_r = jnp.take_along_axis(
+        y_rem, r_idx.reshape(g, m * k)[..., None], axis=1)
+    got_r = got_r.reshape(g, m, k, d) * (~local)[..., None].astype(dt)
+
+    gathered = got_l + got_r
+    return constrain(gathered, "act_batch", None, None, None)
 
 
 def moe_apply(cfg: ModelConfig, p, x) -> Tuple[jnp.ndarray, dict]:
@@ -82,29 +189,37 @@ def moe_apply(cfg: ModelConfig, p, x) -> Tuple[jnp.ndarray, dict]:
         x, src.reshape(g, e * c)[..., None], axis=1)
     xin = constrain(xin, "act_batch", None, None)
     xin = xin.reshape(g, e, c, d).transpose(1, 0, 2, 3)
-    xin = constrain(xin, "act_expert", "act_batch", None, None)
-    xin = xin * slot_used.transpose(1, 0, 2)[..., None].astype(x.dtype)
 
-    # ---- expert FFN (grouped GEMM; Pallas moe_gemm on TPU) ----
-    h = jnp.einsum("egcd,edf->egcf", xin, p["w_in"].astype(x.dtype))
-    h = constrain(h, "act_expert", "act_batch", None, None)
-    if "w_gate" in p:
-        gt = jnp.einsum("egcd,edf->egcf", xin, p["w_gate"].astype(x.dtype))
-        gt = constrain(gt, "act_expert", "act_batch", None, None)
-        h = jax.nn.silu(gt) * h
+    homes = _hier_homes(e, g)
+    if homes > 1:
+        # hierarchical: pod-local dispatch + remote-rows-only exchange
+        gathered = _hier_ffn_combine(
+            p, xin, slot_used, expert_idx, pos, keep, homes)
     else:
-        h = jax.nn.gelu(h)
-    yout = jnp.einsum("egcf,efd->egcd", h, p["w_out"].astype(x.dtype))
-    yout = constrain(yout, "act_expert", "act_batch", None, None)
+        xin = constrain(xin, "act_expert", "act_batch", None, None)
+        xin = xin * slot_used.transpose(1, 0, 2)[..., None].astype(x.dtype)
 
-    # ---- combine: gather each token's k slots back ----
-    y_flat = yout.transpose(1, 0, 2, 3).reshape(g, e * c, d)
-    y_flat = constrain(y_flat, "act_batch", None, None)
-    slot_of = jnp.where(keep, expert_idx * c + pos, 0)         # g m k
-    gathered = jnp.take_along_axis(
-        y_flat, slot_of.reshape(g, m * k)[..., None], axis=1)
-    gathered = constrain(gathered, "act_batch", None, None)
-    gathered = gathered.reshape(g, m, k, d)
+        # ---- expert FFN (grouped GEMM; Pallas moe_gemm on TPU) ----
+        h = jnp.einsum("egcd,edf->egcf", xin, p["w_in"].astype(x.dtype))
+        h = constrain(h, "act_expert", "act_batch", None, None)
+        if "w_gate" in p:
+            gt = jnp.einsum(
+                "egcd,edf->egcf", xin, p["w_gate"].astype(x.dtype))
+            gt = constrain(gt, "act_expert", "act_batch", None, None)
+            h = jax.nn.silu(gt) * h
+        else:
+            h = jax.nn.gelu(h)
+        yout = jnp.einsum("egcf,efd->egcd", h, p["w_out"].astype(x.dtype))
+        yout = constrain(yout, "act_expert", "act_batch", None, None)
+
+        # ---- combine: gather each token's k slots back ----
+        y_flat = yout.transpose(1, 0, 2, 3).reshape(g, e * c, d)
+        y_flat = constrain(y_flat, "act_batch", None, None)
+        slot_of = jnp.where(keep, expert_idx * c + pos, 0)     # g m k
+        gathered = jnp.take_along_axis(
+            y_flat, slot_of.reshape(g, m * k)[..., None], axis=1)
+        gathered = constrain(gathered, "act_batch", None, None)
+        gathered = gathered.reshape(g, m, k, d)
     out = (gathered * gate_vals[..., None].astype(x.dtype)).sum(axis=2)
     out = constrain(out, "act_batch", None, None)
 

@@ -6,6 +6,10 @@ What this suite pins:
   ``psum`` — at the function level (tight) and through the full train
   step per strategy (baseline / fsdp / zero3) on the 8-device conftest
   mesh reshaped ``(pod=2, data=2, model=2)``;
+* BUCKETED sync (``comm_buckets > 1``, any bucket count, with or
+  without int8 error feedback) is interchangeable with the unbucketed
+  schedule AND with flat psum through the train step, and really syncs
+  once per bucket;
 * the train step actually ROUTES through ``comm.sync_grads`` when the
   strategy asks and the mesh has a pod tier;
 * quantize kernel ref == Pallas(interpret) parity;
@@ -188,6 +192,113 @@ def test_train_step_hier_matches_flat_metrics(strategy):
                                        err_msg=k)
 
 
+@pytest.mark.parametrize("n_buckets", [2, 4, 7])
+@pytest.mark.parametrize("strategy", [HIER, COMPRESSED],
+                         ids=["hier", "int8"])
+def test_train_step_bucketed_matches_unbucketed(strategy, n_buckets):
+    """Bucketing is a pure re-chunking of the same per-leaf sync: the
+    metrics trajectory must match the unbucketed schedule exactly —
+    int8 error feedback included (per-bucket residual slices)."""
+    from repro.configs.base import replace
+    mesh = _pod_mesh()
+    bucketed = replace(strategy, name=f"{strategy.name}-b{n_buckets}",
+                       comm_buckets=n_buckets)
+    ref, _ = _run_steps(strategy, mesh)
+    got, _ = _run_steps(bucketed, mesh)
+    for h, f in zip(got, ref):
+        for k in f:
+            np.testing.assert_allclose(h[k], f[k], rtol=1e-6, atol=1e-7,
+                                       err_msg=k)
+
+
+@pytest.mark.parametrize("n_buckets", [3])
+def test_train_step_bucketed_matches_flat_psum(n_buckets):
+    from repro.configs.base import replace
+    mesh = _pod_mesh()
+    bucketed = replace(HIER, name=f"hier-b{n_buckets}",
+                       comm_buckets=n_buckets)
+    got, _ = _run_steps(bucketed, mesh)
+    flat, _ = _run_steps(_flat(bucketed), mesh)
+    for h, f in zip(got, flat):
+        for k in f:
+            np.testing.assert_allclose(h[k], f[k], rtol=1e-4, atol=1e-6,
+                                       err_msg=k)
+
+
+def test_train_step_hier_moe_bucketed_matches_flat_expert_ref():
+    """The full PR-7 feature stack through one train step: a MoE model
+    with ``hierarchical_moe`` (expert weights spanning the pod tier,
+    two-stage dispatch) plus bucketed hierarchical sync must produce
+    the same trajectory as the plain expert-parallel reference.
+
+    Regression: ``grad_rules`` must strip ``pod`` from the expert rule
+    — the stacked chunk dim owns pod on the sync INPUT but not on the
+    OUTPUT, and the asymmetric specs made shard_map mis-concatenate the
+    expert dim (grads came back with 2x the experts)."""
+    from repro.configs.base import MoEConfig
+    mesh = _pod_mesh()
+    cfg = ModelConfig(name="tiny-moe-comm", family="moe", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=128,
+                      moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                                    capacity_factor=1.0))
+    base = dict(tensor_parallel=True, expert_parallel=True,
+                hierarchical_collectives=True)
+    ref = ShardingStrategy(name="moe-ref", **base)
+    new = ShardingStrategy(name="moe-hier-b4", comm_buckets=4,
+                           hierarchical_moe=True, **base)
+    from repro.models import example_batch
+
+    def run(strategy):
+        jitted, sshard, bshard = dsteps.jit_train_step(
+            cfg, TCFG, strategy, mesh, SHAPE)
+        state = dsteps.init_train_state(cfg, TCFG, jax.random.PRNGKey(0),
+                                        strategy)
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state, sshard)
+        batch = {k: jax.device_put(v, bshard[k])
+                 for k, v in example_batch(cfg, SHAPE).items()}
+        out = []
+        for _ in range(3):
+            state, m = jitted(state, batch)
+            out.append({k: float(v) for k, v in m.items()})
+        return out
+
+    for h, f in zip(run(new), run(ref)):
+        for k in f:
+            np.testing.assert_allclose(h[k], f[k], rtol=1e-6, atol=1e-7,
+                                       err_msg=k)
+
+
+def test_bucketed_train_step_syncs_once_per_bucket(monkeypatch):
+    from repro.comm import collectives
+    from repro.configs.base import replace
+    mesh = _pod_mesh()
+    strat = replace(HIER, name="hier-spy-b3", comm_buckets=3)
+    calls = []
+    real = collectives.sync_grads
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(collectives, "sync_grads", spy)
+    from repro.models import example_batch
+    step, sshard, bshard = dsteps.build_train_step(
+        TINY, TCFG, strat, mesh, SHAPE)
+    state = dsteps.init_train_state(TINY, TCFG, jax.random.PRNGKey(0),
+                                    strat)
+    with mesh:
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state, sshard)
+        batch = {k: jax.device_put(v, bshard[k])
+                 for k, v in example_batch(TINY, SHAPE).items()}
+        _, metrics = jax.jit(step, in_shardings=(sshard, bshard))(
+            state, batch)
+    assert len(calls) == 3, "one sync_grads call per bucket"
+    assert np.isfinite(float(metrics["loss"]))
+
+
 def test_train_step_routes_through_sync_grads(monkeypatch):
     mesh = _pod_mesh()
     calls = []
@@ -327,6 +438,33 @@ def test_hier_on_podless_mesh_warns_once_and_runs_flat():
             np.testing.assert_allclose(h[k], f[k], rtol=1e-6, err_msg=k)
 
 
+def test_fallback_rewarns_on_different_podless_mesh():
+    """The warn-once dedup keys on the mesh axis-shape (it rides the
+    message text): an elastic remesh onto a DIFFERENT pod-less mesh
+    warns again instead of being swallowed by the first mesh's entry,
+    while rebuilding on the SAME mesh stays deduped."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (conftest forces them)")
+    mesh_a = shd.make_mesh((2, 4), ("data", "model"))
+    mesh_b = shd.make_mesh((4, 2), ("data", "model"))
+
+    def resolve(m):
+        # one fixed call site: the warnings registry keys on
+        # (message, category, lineno), so dedup is down to the text
+        return comm.resolve_policy(HIER, m)
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("default")
+        resolve(mesh_a)
+        resolve(mesh_a)                    # same mesh: deduped
+        resolve(mesh_b)                    # different shape: re-warns
+    fall = [x for x in w if issubclass(x.category,
+                                       comm.CommFallbackWarning)]
+    assert len(fall) == 2, [str(x.message) for x in fall]
+    assert "'data': 2" in str(fall[0].message)
+    assert "'data': 4" in str(fall[1].message)
+
+
 def test_comm_strict_errors_instead_of_falling_back():
     from repro.configs.base import replace
     mesh = _flat_mesh()
@@ -433,10 +571,13 @@ def test_elastic_remesh_carries_ef_residual_and_pins_trajectory():
     from repro.core import (FluxMiniCluster, JobSpec, JobState,
                             MiniClusterSpec, NetModel, ResourceGraph,
                             SimClock)
+    # comm_buckets exercises the bucketed path through the whole
+    # elastic cycle: the per-bucket EF residual slices must reassemble
+    # into the same (cfg, strategy)-schema'd tree every checkpoint
     strat = ShardingStrategy(name="elastic-int8",
                              hierarchical_collectives=True,
                              compress_cross_pod=True, compress_pods=2,
-                             compress_block=64)
+                             compress_block=64, comm_buckets=3)
     total = 18
     clock = SimClock(seed=0)
     fleet = ResourceGraph(n_pods=2, hosts_per_pod=2, chips_per_host=2)

@@ -90,6 +90,84 @@ def test_moe_aux_loss_increases_with_imbalance():
     assert float(aux_col["moe_aux_loss"]) > float(aux_bal["moe_aux_loss"])
 
 
+# ---------------------------------------------------------------------------
+# Hierarchical dispatch: pod-local + remote-rows-only exchange
+# ---------------------------------------------------------------------------
+
+
+def _hier_ctx(pods=2):
+    from repro.configs.base import ShardingStrategy
+    from repro.dist import actsharding, sharding as shd
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (conftest forces them)")
+    mesh = shd.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    strat = ShardingStrategy(name="hier-moe", tensor_parallel=True,
+                             expert_parallel=True, hierarchical_moe=True)
+    return actsharding.activation_sharding(mesh, strat)
+
+
+@pytest.mark.parametrize("cf", [8.0, 1.0, 0.26],
+                         ids=["ample", "tight", "forced-drops"])
+def test_moe_hierarchical_output_identical_to_flat(cf):
+    """The two-stage combine (pod-local block + masked remote exchange)
+    selects the same slot rows as the flat gather, so outputs must
+    match exactly — including when capacity drops tokens."""
+    cfg = mk_cfg(e=4, k=2, cf=cf)
+    params = P.init_params(MoE.moe_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16), jnp.float32)
+    out_flat, aux_flat = MoE.moe_apply(cfg, params, x)
+    with _hier_ctx():
+        assert MoE._hier_homes(4, 4) == 2      # the hier path is live
+        out_h, aux_h = MoE.moe_apply(cfg, params, x)
+    np.testing.assert_allclose(np.asarray(out_h), np.asarray(out_flat),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(float(aux_h["moe_dropped_frac"]),
+                               float(aux_flat["moe_dropped_frac"]))
+
+
+def test_moe_hierarchical_grads_match_flat():
+    cfg = mk_cfg(e=4, k=2, cf=1.0)
+    params = P.init_params(MoE.moe_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16), jnp.float32)
+
+    def loss(p):
+        out, aux = MoE.moe_apply(cfg, p, x)
+        return (out ** 2).sum() + aux["moe_aux_loss"]
+
+    g_flat = jax.grad(loss)(params)
+    with _hier_ctx():
+        g_hier = jax.grad(loss)(params)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        g_flat, g_hier)
+
+
+def test_moe_hierarchical_gates_off_when_indivisible():
+    """Experts or groups that do not split evenly across pods fall back
+    to the flat path (homes == 1) instead of mis-sharding."""
+    with _hier_ctx():
+        assert MoE._hier_homes(4, 4) == 2
+        assert MoE._hier_homes(3, 4) == 1      # e % pods != 0
+        assert MoE._hier_homes(4, 3) == 1      # g % pods != 0
+    assert MoE._hier_homes(4, 4) == 1          # no context at all
+
+
+def test_moe_hierarchical_expert_weights_span_pod_tier():
+    from repro.configs.base import ShardingStrategy
+    from repro.dist import sharding as shd
+    strat = ShardingStrategy(name="hm", expert_parallel=True,
+                             hierarchical_moe=True)
+    assert shd.param_rules(strat)["expert"] == ("pod", "model")
+    flat = ShardingStrategy(name="fm", expert_parallel=True)
+    assert shd.param_rules(flat)["expert"] == "model"
+    off = ShardingStrategy(name="off", expert_parallel=False,
+                           hierarchical_moe=True)
+    assert shd.param_rules(off)["expert"] is None
+
+
 def test_moe_grads_flow_to_experts_and_router():
     cfg = mk_cfg()
     params = P.init_params(MoE.moe_defs(cfg), jax.random.PRNGKey(0),

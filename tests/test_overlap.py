@@ -1,0 +1,223 @@
+"""Property tests: comm topology, gradient bucketing, overlap schedule.
+
+Pins the invariants the bucketed backward-overlap sync is built on:
+
+* ``CommTopology.from_mesh`` — size-1 axes never become tiers, tier
+  order is stable (pod, data, model), and the pod tier's DCN links are
+  strictly slower (bandwidth) and farther (latency) than ICI;
+* ``partition_buckets`` — every parameter leaf lands in exactly one
+  bucket, buckets follow reverse-layer (descending depth) order, and
+  byte balance stays within 2x the ideal target unless a single leaf
+  alone exceeds it;
+* ``schedule_overlap`` — the event model conserves time (hidden +
+  exposed == total cross-pod), serializes the DCN channel, and under
+  bench-like magnitudes the bucketed schedule hides >= 50% of its DCN
+  time and never models a longer step than the unbucketed one;
+* ``estimate_a2a_bytes`` — hierarchical MoE dispatch prices STRICTLY
+  fewer cross-pod bytes than the flat all-to-all whenever a pod tier
+  exists and the capacity factor is >= 1.
+"""
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+except ModuleNotFoundError:        # no extra deps in tier-1: see shim
+    from _hypothesis_fallback import HealthCheck, given, settings, st
+
+from types import SimpleNamespace
+
+from repro import comm
+from repro.comm import bucketing
+from repro.comm.topology import DCN_BW, DCN_LATENCY, ICI_BW, ICI_LATENCY
+from repro.models.params import PDef
+
+FAST = settings(max_examples=40, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+def _mesh_stub(pod, data, model):
+    # from_mesh only reads mesh.shape; a stub keeps the sampling free of
+    # the 8-device conftest constraint
+    return SimpleNamespace(shape={"pod": pod, "data": data, "model": model})
+
+
+def _tree(block_dims, embed_rows, enc_rows):
+    """A transformer-shaped PDef tree: embed / encoder / blocks.p{i}."""
+    defs = {
+        "embed": {"w": PDef((embed_rows, 8), ("vocab", "embed"))},
+        "encoder": {"w": PDef((enc_rows, 4), (None, None))},
+        "blocks": {},
+    }
+    for i, rows in enumerate(block_dims):
+        defs["blocks"][f"p{i}"] = {
+            "a": PDef((rows, 16), ("embed", "ff")),
+            "b": PDef((16, rows), ("ff", "embed")),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# CommTopology.from_mesh
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(pod=st.integers(1, 4), data=st.integers(1, 4),
+       model=st.integers(1, 4))
+def test_from_mesh_size_one_axes_never_tier_and_order_stable(
+        pod, data, model):
+    sizes = {"pod": pod, "data": data, "model": model}
+    topo = comm.CommTopology.from_mesh(_mesh_stub(pod, data, model))
+    assert all(t.size > 1 for t in topo.tiers)
+    # stable slow -> fast order, exactly the >1 axes
+    assert [t.axis for t in topo.tiers] == \
+        [a for a in ("pod", "data", "model") if sizes[a] > 1]
+    assert topo.has_pod_tier == (pod > 1)
+    assert topo.pod_size == (pod if pod > 1 else 1)
+    for t in topo.tiers:
+        if t.axis == "pod":
+            assert t.bandwidth == DCN_BW and t.latency == DCN_LATENCY
+        else:
+            assert t.bandwidth == ICI_BW and t.latency == ICI_LATENCY
+    # bandwidth monotone: every ICI tier strictly beats DCN
+    assert ICI_BW > DCN_BW and ICI_LATENCY < DCN_LATENCY
+
+
+# ---------------------------------------------------------------------------
+# partition_buckets
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(block_dims=st.lists(st.integers(1, 64), min_size=1, max_size=6),
+       embed_rows=st.integers(1, 512), enc_rows=st.integers(1, 64),
+       n_buckets=st.integers(1, 12))
+def test_partition_covers_balances_and_orders(block_dims, embed_rows,
+                                              enc_rows, n_buckets):
+    import jax
+    defs = _tree(block_dims, embed_rows, enc_rows)
+    n_leaves = len(jax.tree_util.tree_leaves(
+        defs, is_leaf=lambda x: isinstance(x, PDef)))
+    buckets = bucketing.partition_buckets(defs, n_buckets)
+    assert len(buckets) == min(n_buckets, n_leaves)
+
+    # every leaf in exactly one bucket
+    idx = [i for b in buckets for i in b.flat_idx]
+    assert sorted(idx) == list(range(n_leaves))
+
+    # reverse-layer order: depths are non-increasing across the
+    # concatenated bucket runs (deep blocks first, embed last)
+    depths = [bucketing.leaf_depth(p) for b in buckets for p in b.paths]
+    assert depths == sorted(depths, reverse=True)
+
+    # byte balance within 2x target unless one leaf alone exceeds it
+    total = sum(b.n_bytes for b in buckets)
+    target = total / len(buckets)
+    for b in buckets:
+        leaf_bytes = [4 * n for n in b.leaf_elems]
+        assert b.n_bytes <= 2 * target or max(leaf_bytes) > target, \
+            (b.index, b.n_bytes, target)
+        assert b.n_bytes == 4 * b.n_elems
+        assert b.padded_elems(256) >= b.n_elems
+
+
+@FAST
+@given(n_buckets=st.integers(1, 8), unit=st.integers(1, 512))
+def test_bucket_subtrees_roundtrip(n_buckets, unit):
+    import jax
+    import numpy as np
+    defs = _tree([8, 16, 32], 64, 8)
+    buckets = bucketing.partition_buckets(defs, n_buckets)
+    rng = np.random.default_rng(0)
+    tree = jax.tree_util.tree_map(
+        lambda d: rng.normal(size=d.shape).astype(np.float32), defs,
+        is_leaf=lambda x: isinstance(x, PDef))
+    back = bucketing.unbucket_leaves(
+        bucketing.bucket_subtrees(tree, defs, buckets), defs, buckets)
+    jax.tree_util.tree_map(np.testing.assert_array_equal, tree, back)
+
+
+# ---------------------------------------------------------------------------
+# schedule_overlap
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(n_buckets=st.integers(1, 8), bw_us=st.integers(1, 50_000))
+def test_schedule_overlap_event_model_invariants(n_buckets, bw_us):
+    topo = comm.CommTopology.from_mesh(_mesh_stub(2, 2, 2))
+    buckets = bucketing.partition_buckets(_tree([8, 16, 32], 256, 16),
+                                          n_buckets)
+    backward_s = bw_us * 1e-6
+    sched = comm.schedule_overlap(topo, buckets, backward_s=backward_s)
+    assert sched.n_buckets == len(buckets)
+    # conservation: every transfer second is hidden xor exposed
+    assert abs(sched.hidden_s + sched.exposed_s - sched.cross_pod_s) < 1e-12
+    assert 0.0 <= sched.hidden_frac <= 1.0
+    # the DCN channel is serialized and causality holds
+    prev_end = 0.0
+    for w in sched.windows:
+        assert w.start_s >= w.ready_s - 1e-12
+        assert w.start_s >= prev_end - 1e-12
+        assert abs(w.end_s - (w.start_s + w.cross_pod_s)) < 1e-12
+        prev_end = w.end_s
+    assert abs(sched.step_time_s
+               - max(backward_s, sched.windows[-1].end_s)) < 1e-12
+    # int8 compresses the same timeline: strictly less DCN time
+    int8 = comm.schedule_overlap(topo, buckets, backward_s=backward_s,
+                                 compress=True)
+    assert int8.cross_pod_s < sched.cross_pod_s
+
+
+def test_schedule_overlap_bench_magnitudes_hide_half_and_beat_unbucketed():
+    """The two BENCH_comm.json overlap claims, at bench-like magnitudes
+    (backward in the milliseconds, DCN transfers in the microseconds):
+    bucketing hides >= 50% of cross-pod time and never models a longer
+    step than the unbucketed schedule."""
+    topo = comm.CommTopology.from_mesh(_mesh_stub(2, 2, 2))
+    defs = _tree([64, 64, 64, 64], 128, 16)    # block-dominated, bench-like
+    backward_s = 20e-3
+    unb = comm.schedule_overlap(topo, bucketing.partition_buckets(defs, 1),
+                                backward_s=backward_s)
+    assert unb.hidden_frac == 0.0          # one bucket: fully exposed
+    # with n ~byte-balanced buckets only the last one (ready exactly at
+    # backward end) is exposed, so hidden_frac approaches (n-1)/n: the
+    # bench's >= 0.5 claim needs n >= 4 plus a block-dominated tree
+    for nb in (4, 8):
+        sched = comm.schedule_overlap(
+            topo, bucketing.partition_buckets(defs, nb),
+            backward_s=backward_s)
+        assert sched.hidden_frac >= 0.5, (nb, sched.hidden_frac)
+        assert sched.step_time_s <= unb.step_time_s + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# estimate_a2a_bytes
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(pods=st.integers(2, 4), n_tokens=st.integers(8, 2048),
+       top_k=st.integers(1, 4), n_experts=st.sampled_from([4, 8, 16]),
+       cf_tenths=st.integers(10, 30), d_model=st.sampled_from([64, 256]))
+def test_a2a_hierarchical_strictly_cheaper_than_flat(
+        pods, n_tokens, top_k, n_experts, cf_tenths, d_model):
+    topo = comm.CommTopology.from_mesh(_mesh_stub(pods, 2, 2))
+    capacity = max(1, int(-(-n_tokens * top_k * (cf_tenths / 10.0)
+                            // n_experts)))
+    kw = dict(n_tokens=n_tokens, d_model=d_model, n_experts=n_experts,
+              capacity=capacity, top_k=top_k)
+    flat = comm.estimate_a2a_bytes(topo, hierarchical=False, **kw)
+    hier = comm.estimate_a2a_bytes(topo, hierarchical=True, **kw)
+    # strict: E * capacity >= n_tokens * top_k * cf > n_tokens * top_k / P
+    assert hier["cross_pod_bytes"] < flat["cross_pod_bytes"]
+    assert hier["cross_pod_per_link"] < flat["cross_pod_per_link"]
+    assert hier["est_cross_pod_time_s"] < flat["est_cross_pod_time_s"]
+
+
+def test_a2a_no_pod_tier_prices_zero():
+    topo = comm.CommTopology.from_mesh(_mesh_stub(1, 2, 2))
+    est = comm.estimate_a2a_bytes(topo, n_tokens=128, d_model=64,
+                                  n_experts=8, capacity=32, top_k=2,
+                                  hierarchical=True)
+    assert est["cross_pod_bytes"] == 0.0
+    assert est["est_cross_pod_time_s"] == 0.0
