@@ -122,6 +122,132 @@ def _sweep_section(prefill_chunk: int, emit, tag: str) -> list:
     return rows
 
 
+# -- fleet section ----------------------------------------------------------
+# The fleet sweep runs in VIRTUAL time: one router tick = every replica
+# ticking once, concurrently = one time unit.  On this single CPU host
+# the replicas actually tick serially, so wall-clock would (wrongly)
+# show zero fleet speedup; the tick model measures what the fleet tier
+# itself contributes (dispatch, fairness, prefix reuse) — the same
+# event-model convention the comm-overlap benchmarks use.
+FLEET_RATES = (0.25, 0.5, 1.0)    # requests / virtual tick
+FLEET_PREFIX_LEN = 8              # one page: the shared system prompt
+FLEET_SUFFIX_LEN = 6
+FLEET_TENANTS = ("tenant-a", "tenant-b")
+
+
+def _fleet_workload(seed: int = 0):
+    """N_REQUESTS prompts sharing one page-aligned system prefix, with
+    tenants alternating (equal offered rate per tenant)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, TINY.vocab_size, FLEET_PREFIX_LEN).tolist()
+    prompts = [prefix + rng.integers(0, TINY.vocab_size,
+                                     FLEET_SUFFIX_LEN).tolist()
+               for _ in range(N_REQUESTS)]
+    tenants = [FLEET_TENANTS[i % 2] for i in range(N_REQUESTS)]
+    return prompts, tenants
+
+
+def _run_fleet_rate(engines, rate: float, prompts, tenants, *,
+                    prefix_cache: bool, seed: int = 0):
+    """Drive one arrival schedule through a Router in virtual ticks;
+    returns (row, per-request token lists)."""
+    from repro.serve import Router
+    router = Router(list(engines), prefix_cache=prefix_cache)
+    before = [e.stats() for e in engines]
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, N_REQUESTS))
+    reqs, submit_tick, first_tick = [], {}, {}
+    tick, nxt = 0, 0
+    while nxt < N_REQUESTS or router.has_work:
+        while nxt < N_REQUESTS and arrivals[nxt] <= tick:
+            r = router.submit(prompts[nxt], max_new_tokens=MAX_NEW,
+                              tenant=tenants[nxt])
+            submit_tick[r.rid] = tick
+            reqs.append(r)
+            nxt += 1
+        router.step()
+        tick += 1
+        for r in reqs:
+            if r.rid not in first_tick and r.tokens:
+                first_tick[r.rid] = tick
+    n_tok = sum(len(r.tokens) for r in reqs)
+    after = [e.stats() for e in engines]
+    ttft = {t: sorted(first_tick[r.rid] - submit_tick[r.rid]
+                      for r in reqs if r.tenant == t)
+            for t in FLEET_TENANTS}
+    row = {
+        "rate_req_per_tick": rate,
+        "replicas": len(engines),
+        "prefix_cache": prefix_cache,
+        "n_requests": len(reqs),
+        "n_tokens": n_tok,
+        "elapsed_ticks": tick,
+        "tokens_per_tick": n_tok / tick,
+        "n_prefills": sum(a["n_prefills"] - b["n_prefills"]
+                          for a, b in zip(after, before)),
+        "ttft_p99_ticks_by_tenant": {
+            t: float(np.percentile(v, 99)) for t, v in ttft.items()},
+        "prefix_cache_stats": router.stats().get("prefix_cache"),
+    }
+    return row, [list(r.tokens) for r in reqs]
+
+
+def _fleet_section(emit) -> tuple:
+    """Rate sweep over replicas in {1, 2} plus the prefix-cache identity
+    run; returns (section dict, claims dict)."""
+    from repro.serve import Engine
+    ecfg = _engine_config(prefill_chunk=FLEET_PREFIX_LEN)
+    e1 = _make_engine(ecfg)                      # the 1-replica fleet
+    e2 = [_make_engine(ecfg), _make_engine(ecfg)]  # the 2-replica fleet
+    prompts, tenants = _fleet_workload()
+    rows1, rows2 = [], []
+    for rate in FLEET_RATES:
+        r1, _ = _run_fleet_rate([e1], rate, prompts, tenants,
+                                prefix_cache=False)
+        r2, _ = _run_fleet_rate(e2, rate, prompts, tenants,
+                                prefix_cache=False)
+        rows1.append(r1)
+        rows2.append(r2)
+        emit(f"serving_fleet_{rate:g}rpt", r1["elapsed_ticks"],
+             f"1rep {r1['tokens_per_tick']:.2f} tok/tick vs "
+             f"2rep {r2['tokens_per_tick']:.2f} tok/tick")
+    # prefix-cache run: same engines + arrival schedule as the top-rate
+    # 2-replica row, now with the shared cache on
+    rc, toks_cached = _run_fleet_rate(e2, FLEET_RATES[-1], prompts,
+                                      tenants, prefix_cache=True)
+    # uncached single-engine greedy reference (the pinned invariant:
+    # batch composition / paging / chunking never change greedy output)
+    refs = [e1.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+    e1.run()
+    ref_tokens = [list(r.tokens) for r in refs]
+    top1, top2 = rows1[-1], rows2[-1]
+    p99 = rc["ttft_p99_ticks_by_tenant"]
+    hi, lo = max(p99.values()), min(p99.values())
+    claims = {
+        "fleet_2rep_throughput_ge_1p5x_at_top_rate":
+            top2["tokens_per_tick"] >= 1.5 * top1["tokens_per_tick"],
+        "fleet_tenant_p99_ttft_within_2x":
+            hi <= 2.0 * max(lo, 1.0),
+        "fleet_prefix_cache_skips_prefill":
+            rc["n_prefills"] < top2["n_prefills"],
+        "fleet_prefix_cache_greedy_identity":
+            toks_cached == ref_tokens,
+    }
+    emit("serving_fleet_claims", 0.0,
+         f"2rep/1rep throughput x"
+         f"{top2['tokens_per_tick'] / top1['tokens_per_tick']:.2f}; "
+         f"tenant p99 ticks {p99}; prefills cached {rc['n_prefills']} "
+         f"vs uncached {top2['n_prefills']}; {claims}")
+    section = {
+        "time_model": "virtual ticks: one router tick = all replicas "
+                      "tick concurrently = one time unit",
+        "rates_1rep": rows1,
+        "rates_2rep": rows2,
+        "prefix_cache_run": rc,
+    }
+    return section, claims
+
+
 def _tuned_flags_section(emit, iters: int) -> dict:
     """Sweep the XLA flag sets for this cell; key by (arch, mesh)."""
     from repro.dist import sharding as shd
@@ -144,6 +270,7 @@ def main(emit, smoke: bool = False):
     # ticks (the chunk rides a decode tick); smaller budgets trade more
     # ticks per prompt for a tighter per-tick latency bound
     chunked = _sweep_section(PROMPT_LEN, emit, "chunked")
+    fleet, fleet_claims = _fleet_section(emit)
     tuned = _tuned_flags_section(emit, iters=3 if smoke else 10)
 
     # claim checks: at the highest rate, fusing admission into the
@@ -155,6 +282,7 @@ def main(emit, smoke: bool = False):
         "chunked_tokens_per_s_not_worse_at_top_rate":
             top_c["tokens_per_s"] >= top_l["tokens_per_s"] / TOL,
     }
+    claims.update(fleet_claims)
     emit("serving_claims", 0.0,
          f"chunked ttft_max {top_c['ttft_max_ms']:.1f}ms vs legacy "
          f"{top_l['ttft_max_ms']:.1f}ms at {top_l['rate_rps']:g}rps; "
@@ -164,6 +292,7 @@ def main(emit, smoke: bool = False):
                    "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
                    "legacy": {"rates": legacy},
                    "chunked_prefill": {"rates": chunked},
+                   "fleet": fleet,
                    "tuned_flags": tuned,
                    "claims": claims}, f, indent=2)
     if smoke and not all(claims.values()):

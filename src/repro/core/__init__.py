@@ -3,12 +3,14 @@ operator over a TPU fleet, with TBON broker overlay, Fluxion graph
 scheduling, elasticity, autoscaling, bursting, queue state migration,
 and fault tolerance — plus the MPI Operator baseline it is evaluated
 against."""
-from repro.core.autoscaler import Autoscaler, FluxMetricsPolicy, HPAPolicy  # noqa: F401
+from repro.core.autoscaler import (Autoscaler, FleetDemandPolicy,  # noqa: F401
+                                   FluxMetricsPolicy, HPAPolicy)
 from repro.core.broker import BrokerPool, BrokerState, TBON  # noqa: F401
 from repro.core.burst import BurstService, make_plugin  # noqa: F401
 from repro.core.executor import (ElasticServeExecutor,  # noqa: F401
-                                 ElasticTrainExecutor, JaxWorkloadExecutor,
-                                 ServeExecutor, SubmeshExecutor)
+                                 ElasticTrainExecutor, FleetServeExecutor,
+                                 JaxWorkloadExecutor, ServeExecutor,
+                                 SubmeshExecutor)
 from repro.core.fault import StragglerMitigator, kill_node, make_straggler  # noqa: F401
 from repro.core.instance import FluxInstance  # noqa: F401
 from repro.core.jobspec import Job, JobSpec, JobState  # noqa: F401

@@ -57,6 +57,30 @@ class FluxMetricsPolicy:
                    min(self.max_size, want, mc.spec.effective_max))
 
 
+@dataclass
+class FleetDemandPolicy:
+    """Scale a serving FLEET from its router's demand signal.
+
+    ``Router.desired_replicas`` converts the demand EWMA (in-flight +
+    queued requests) into the replica count that would hold occupancy
+    at ``target_occupancy`` of per-replica slots; this policy maps that
+    to hosts (``nodes_per_replica`` per engine) so the same Autoscaler
+    patch path that resizes MiniClusters resizes fleets.
+    """
+
+    router: object = None             # repro.serve.Router (duck-typed)
+    nodes_per_replica: int = 1
+    target_occupancy: float = 0.75
+    min_size: int = 1
+    max_size: int = 64
+
+    def desired(self, mc: FluxMiniCluster) -> int:
+        reps = self.router.desired_replicas(self.target_occupancy)
+        want = reps * self.nodes_per_replica
+        return max(self.min_size,
+                   min(self.max_size, want, mc.spec.effective_max))
+
+
 class Autoscaler:
     def __init__(self, clock: SimClock, mc: FluxMiniCluster, policy,
                  interval: float = 15.0, stabilization: float = 60.0):
@@ -66,6 +90,10 @@ class Autoscaler:
         self.interval = interval
         self.stabilization = stabilization     # scale-down damping (HPA)
         self._last_scale_down = -1e9
+        # scale-down wanted inside the stabilization window: deferred,
+        # not dropped — applied when the window expires (HPA semantics:
+        # the window picks the HIGHEST recommendation seen inside it)
+        self._pending_down: Optional[int] = None
         self.decisions = []
         self._running = False
 
@@ -86,11 +114,26 @@ class Autoscaler:
         # resize-event path as user patches, tagged with their source so
         # elastic workloads (and the trace) can tell who resized them
         if want > cur:
+            self._pending_down = None          # demand is back — cancel
             self.mc.patch_size(want, source="autoscaler")
             self.decisions.append((self.clock.now, cur, want))
         elif want < cur:
             if self.clock.now - self._last_scale_down >= self.stabilization:
-                self.mc.patch_size(want, source="autoscaler")
+                # the highest recommendation seen inside the window wins
+                # (scale down no further than any deferred target asked)
+                target = want if self._pending_down is None \
+                    else max(want, self._pending_down)
+                self._pending_down = None
+                self.mc.patch_size(target, source="autoscaler")
                 self._last_scale_down = self.clock.now
-                self.decisions.append((self.clock.now, cur, want))
+                self.decisions.append((self.clock.now, cur, target))
+            else:
+                # inside the window: defer, don't drop — a sustained
+                # drop is applied by the first tick past the window
+                self._pending_down = want if self._pending_down is None \
+                    else max(self._pending_down, want)
+                self.decisions.append(
+                    (self.clock.now, cur, want, "deferred"))
+        else:
+            self._pending_down = None
         self.clock.call_in(self.interval, self._tick)

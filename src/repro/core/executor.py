@@ -618,6 +618,124 @@ class ServeExecutor:
         self.clock.call_in(wall, done, "completed", wall)
 
 
+class FleetServeExecutor(ServeExecutor):
+    """A serve job served by N engine REPLICAS behind one Router — the
+    Flux-Operator shape (one reconciled allocation, many workers)
+    applied to serving.
+
+    The reconciler binds ONE allocation of ``replicas x
+    nodes_per_replica`` hosts; this executor slices it pod-major into
+    ``replicas`` consecutive host groups, raises a submesh per group,
+    and builds one :class:`repro.serve.Router` over shape-identical
+    engines sharing one host-side parameter copy (so the fleet is a
+    true replica set and the shared prefix cache's token-identity
+    guarantee holds).  Dispatch, tenant fairness and the prefix cache
+    all live in the router; ``ran`` records per-replica meshes and the
+    fleet-level stats, plus the router's ``desired_replicas`` signal
+    for the autoscaler.
+    """
+
+    def __init__(self, clock: SimClock, net: NetModel, replicas: int = 2,
+                 nodes_per_replica: int = 1, tenant: str = "default",
+                 ttft_slo_s: float = 0.0, **kw):
+        super().__init__(clock, net, **kw)
+        self.replicas = max(replicas, 1)
+        self.nodes_per_replica = max(nodes_per_replica, 1)
+        self.tenant = tenant
+        self.ttft_slo_s = ttft_slo_s or None
+        self._fleets: Dict = {}
+
+    def _slices(self, rset: ResourceSet) -> List[ResourceSet]:
+        """Pod-major consecutive host groups, one per replica (the match
+        already sorted hosts pod-major, so groups stay pod-local when
+        the allocation allows it)."""
+        npr = self.nodes_per_replica
+        assert rset.n_hosts == self.replicas * npr, \
+            (rset.n_hosts, self.replicas, npr)
+        out = []
+        for r in range(self.replicas):
+            lo, hi = r * npr, (r + 1) * npr
+            out.append(ResourceSet(
+                hosts=tuple(rset.hosts[lo:hi]),
+                chips_per_host=rset.chips_per_host,
+                pods=tuple(rset.pods[lo:hi]) if rset.pods else ()))
+        return out
+
+    def _fleet(self, command: str, rset: ResourceSet):
+        key = (command, tuple(rset.hosts), rset.chips_per_host)
+        fleet = self._fleets.get(key)
+        if fleet is not None:
+            return fleet
+        import jax
+        from repro.configs import BASELINE
+        from repro.dist.sharding import submesh_for
+        from repro.models.model import Model
+        from repro.serve import Engine, EngineConfig, Router
+        cfg = self.cfg or smoke_config_for(command)
+        ecfg = self.engine_config or EngineConfig(
+            n_slots=4, page_size=8, max_seq_len=64, max_prompt_len=16)
+        params = Model(cfg).init(jax.random.PRNGKey(0))
+        engines = []
+        for sub in self._slices(rset):
+            eng = Engine(cfg, ecfg, strategy=self.strategy or BASELINE,
+                         mesh=submesh_for(sub), params=params, seed=0)
+            # compile outside timing (the shared executor contract)
+            warm = eng.submit(
+                [1] * min(self.prompt_len, ecfg.max_prompt_len),
+                max_new_tokens=2)
+            eng.run()
+            assert warm.finished
+            engines.append(eng)
+        fleet = Router(engines)       # prefix cache auto-enables when
+        self._fleets[key] = fleet     # the replicas support it
+        return fleet
+
+    def __call__(self, job: Job, rset: ResourceSet, done):
+        fleet = self._fleet(job.spec.command, rset)
+        eng = fleet.engines[0]
+        vocab = eng.cfg.vocab_size
+        plen = min(self.prompt_len, eng.ecfg.max_prompt_len)
+        prompts = job.spec.args.get("prompts")
+        if prompts is None:
+            prompts = [[(7 * i + j) % vocab for j in range(plen)]
+                       for i in range(self.n_requests)]
+        prompts = [list(p)[:eng.ecfg.max_prompt_len] for p in prompts]
+        max_new = int(job.spec.args.get("max_new", self.max_new))
+        max_new = max(1, min(max_new, eng.ecfg.max_seq_len
+                             - max(len(p) for p in prompts)))
+        temp = float(job.spec.args.get("temperature", 0.0))
+        tenant = str(job.spec.args.get("tenant", self.tenant))
+        slo = job.spec.args.get("ttft_slo_s", self.ttft_slo_s) or None
+        t0 = time.perf_counter()
+        reqs = [fleet.submit(p, max_new_tokens=max_new, temperature=temp,
+                             tenant=tenant, ttft_slo_s=slo)
+                for p in prompts]
+        fleet.run()
+        elapsed = time.perf_counter() - t0
+        n_tok = sum(len(r.tokens) for r in reqs)
+        ttfts = [r.ttft_e2e for r in reqs if r.ttft_e2e is not None]
+        measured = elapsed * self.time_scale
+        stats = fleet.stats()
+        self.ran[job.jobid] = {
+            "replicas": self.replicas,
+            "mesh_shapes": [tuple(e.mesh.devices.shape)
+                            for e in fleet.engines],
+            "n_devices": sum(int(e.mesh.size) for e in fleet.engines),
+            "hosts": list(rset.hosts),
+            "n_requests": len(reqs),
+            "n_tokens": n_tok,
+            "tokens_per_s": n_tok / max(elapsed, 1e-9),
+            "ttft_mean_s": sum(ttfts) / max(len(ttfts), 1),
+            "n_prefills": stats["n_prefills"],
+            "prefix_cache": stats.get("prefix_cache"),
+            "desired_replicas": fleet.desired_replicas(),
+            "measured_s": measured,
+        }
+        wall = measured + tbon_bootstrap_cost(self.net, rset.n_hosts,
+                                              self.k)
+        self.clock.call_in(wall, done, "completed", wall)
+
+
 @dataclass
 class _ServeSession:
     """One elastic serve job's state across resizes and requeues."""

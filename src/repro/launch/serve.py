@@ -64,6 +64,10 @@ def main():
                     choices=list(STRATEGIES))
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help=">0: chunked prefill inside the decode tick")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1: a Router over N engine replicas (the "
+                         "fleet tier; shared prefix cache when the "
+                         "engines support it)")
     ap.add_argument("--tuned-flags", default=None, metavar="JSON",
                     help="TUNED_FLAGS.json from repro.tune.autotune; the "
                          "(arch, mesh) cell's winning XLA flags are "
@@ -92,6 +96,7 @@ def main():
         args.gen = s.max_new
         args.temperature = s.temperature
         args.prompt_len = min(args.prompt_len, s.max_prompt_len)
+        args.replicas = max(args.replicas, s.replicas)
         ecfg = wspec.engine_config()
     else:
         assert args.arch, "--arch or --spec is required"
@@ -104,7 +109,12 @@ def main():
                                  args.page_size),
             prefill_chunk=args.prefill_chunk)
     t_build = time.perf_counter()
-    eng = Engine(cfg, ecfg, strategy=strategy, mesh=mesh)
+    if args.replicas > 1:
+        from repro.serve import Router
+        eng = Router([Engine(cfg, ecfg, strategy=strategy, mesh=mesh)
+                      for _ in range(args.replicas)])
+    else:
+        eng = Engine(cfg, ecfg, strategy=strategy, mesh=mesh)
     t0 = time.perf_counter()                    # serving clock: post-build
     rng = np.random.default_rng(0)
     reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
@@ -120,7 +130,8 @@ def main():
     per_tok = (elapsed - max(ttft)) / max(args.gen - 1, 1)
     print(f"mesh {dict(mesh.shape)} strategy {strategy.name} "
           f"temperature {args.temperature} "
-          f"(engine build {(t0 - t_build)*1e3:.0f} ms)"
+          + (f"replicas {args.replicas} " if args.replicas > 1 else "")
+          + f"(engine build {(t0 - t_build)*1e3:.0f} ms)"
           + (f" tuned_flags {tuned}" if tuned else ""))
     print(f"prefill {args.prompt_len} toks x{args.batch}: "
           f"ttft {min(ttft)*1e3:.1f}-{max(ttft)*1e3:.1f} ms (incl. compile)")

@@ -6,5 +6,7 @@ consumes, with a fixed-slot workload shape so jit compiles once and
 requests flow through slots/pages instead of recompiles.
 """
 from repro.serve.engine import Engine, EngineConfig, sample_tokens  # noqa: F401
+from repro.serve.fleet import PrefixCache, Router  # noqa: F401
 from repro.serve.paging import PageAllocator, init_pool, scatter_prefill  # noqa: F401
-from repro.serve.scheduler import Request, Scheduler, SubmitError  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    Request, Scheduler, StreamError, SubmitError)

@@ -31,7 +31,7 @@ from repro.dist import sharding as shd
 from repro.dist import steps as dsteps
 from repro.models.model import Model
 from repro.serve import paging
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, Scheduler, StreamError
 
 
 def sample_tokens(logits, temps, key):
@@ -168,22 +168,43 @@ class Engine:
             paging.init_pool(cfg, ecfg.n_slots, layout), pool_sh)
         self._next_token = np.zeros((ecfg.n_slots,), np.int32)
         self._key = jax.random.PRNGKey(seed + 1)
+        # n_prefills counts prefill COMPUTE passes (one-shot prefills and
+        # mixed ticks that consumed prompt tokens) — a prefix-cache hit
+        # that skips prompt work therefore lowers it
         self.n_prefills = 0
+        self.n_prefill_tokens = 0
         self.n_decode_steps = 0
         self.n_mixed_steps = 0
         self.n_generated = 0
+        self.prefix_cache = None      # set by a fleet Router (fleet.py)
 
     # -- request API --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
-               temperature: float = 0.0,
-               eos_id: Optional[int] = None) -> Request:
+               temperature: float = 0.0, eos_id: Optional[int] = None,
+               tenant: str = "default",
+               ttft_slo_s: Optional[float] = None) -> Request:
         return self.scheduler.submit(Request(
             prompt=list(prompt), max_new_tokens=max_new_tokens,
-            temperature=temperature, eos_id=eos_id))
+            temperature=temperature, eos_id=eos_id, tenant=tenant,
+            ttft_slo_s=ttft_slo_s))
+
+    def _owns(self, req: Request) -> bool:
+        """Is ``req`` in this engine's scheduler (queued, mid-prefill,
+        or running)?"""
+        sch = self.scheduler
+        return (any(r is req for r in sch.waiting)
+                or any(r is req for r in sch.prefilling)
+                or any(r is req for r in sch.running.values()))
 
     def stream(self, req: Request) -> Iterator[int]:
         """Yield ``req``'s tokens as they are generated, pumping the
-        engine (other in-flight requests advance too)."""
+        engine (other in-flight requests advance too).
+
+        Raises :class:`StreamError` if the engine runs out of work while
+        ``req`` is unfinished — i.e. the request was never submitted
+        here (or belongs to a different replica).  Ending the iterator
+        silently would be indistinguishable from a completed stream.
+        """
         emitted = 0
         while True:
             while emitted < len(req.tokens):
@@ -192,7 +213,19 @@ class Engine:
             if req.finished:
                 return
             if not self.step():
-                return
+                code = ("starved_request" if self._owns(req)
+                        else "foreign_request")
+                raise StreamError([{
+                    "field": "request", "code": code,
+                    "message": (
+                        f"engine out of work with request rid={req.rid} "
+                        f"unfinished (state={req.state}, "
+                        f"{len(req.tokens)}/{req.max_new_tokens} tokens "
+                        "emitted)"
+                        + ("" if code == "starved_request" else
+                           " — it was never submitted to this engine; "
+                           "stream it from the replica that owns it")),
+                }])
 
     def run(self) -> None:
         """Drive until every submitted request has finished."""
@@ -210,6 +243,12 @@ class Engine:
         every fully prefilled slot.
         """
         admitted = self.scheduler.admit()
+        if admitted and self.prefix_cache is not None and self._chunked:
+            # fleet prefix cache: copy cached pages for the longest
+            # page-aligned common prompt prefix into the slot's own
+            # pages (copy-on-adopt) and skip those prompt tokens
+            for req in admitted:
+                self.prefix_cache.adopt(self, req)
         if self._chunked:
             nxt = self.scheduler.next_chunk()
             if nxt is not None:
@@ -298,6 +337,7 @@ class Engine:
             np.array([slot], np.int32),
             np.array([req.temperature], np.float32), self._split())
         self.n_prefills += 1
+        self.n_prefill_tokens += plen
         self._emit(req, int(tok[0]))
 
     def _run_mixed(self, req: Request, start: int, n: int) -> None:
@@ -330,12 +370,14 @@ class Engine:
             np.int32(self.alloc.null_page_of(slot)),
             np.int32(slot), np.bool_(final), temps, self._split())
         self.n_mixed_steps += 1
+        if n > 0:
+            self.n_prefills += 1          # this tick did prompt work
+            self.n_prefill_tokens += n
         tok = np.asarray(tok)
         for s, r_ in active.items():
             self.alloc.advance(s)
             self._emit(r_, int(tok[s]))
         if self.scheduler.chunk_done(req, n):
-            self.n_prefills += 1
             self._emit(req, int(tok[slot]))
 
     def _run_decode(self) -> None:
@@ -359,6 +401,7 @@ class Engine:
     def stats(self) -> dict:
         return {
             "n_prefills": self.n_prefills,
+            "n_prefill_tokens": self.n_prefill_tokens,
             "n_decode_steps": self.n_decode_steps,
             "n_mixed_steps": self.n_mixed_steps,
             "n_generated": self.n_generated,

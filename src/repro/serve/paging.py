@@ -178,6 +178,21 @@ class PageAllocator:
                 return slot
         return None
 
+    def max_admit_pages(self) -> int:
+        """Largest worst-case page reservation any admission could make
+        right now: the best free-page count over shards that still own a
+        free slot (-1 when no slot is free).  Lets the scheduler stop a
+        first-fit pass early — once every remaining waiting request
+        needs more than this, no candidate can be admitted this tick."""
+        best = -1
+        seen = set()
+        for slot in self.free_slots:
+            shard = self.shard_of(slot)
+            if shard not in seen:
+                seen.add(shard)
+                best = max(best, self._shard_free(shard))
+        return best
+
     def can_admit(self, prompt_len: int, max_new: int) -> bool:
         total = prompt_len + max_new
         if total > self.layout.pages_per_slot * self.layout.page_size:

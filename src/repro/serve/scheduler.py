@@ -46,20 +46,46 @@ class SubmitError(ValueError):
         super().__init__("invalid request:\n" + "\n".join(lines))
 
 
+class StreamError(RuntimeError):
+    """A stream ended with its request unfinished — the engine ran out
+    of work while the request was never (or is no longer) its to serve,
+    e.g. it was submitted to a different replica of a fleet.  Structured
+    like :class:`SubmitError` so callers can match on the code instead
+    of parsing the message."""
+
+    def __init__(self, errors: List[Dict[str, str]]):
+        self.errors = errors
+        lines = [f"  - {e['field']}: [{e['code']}] {e['message']}"
+                 for e in errors]
+        super().__init__("stream cannot finish:\n" + "\n".join(lines))
+
+
 @dataclass
 class Request:
-    """One generation request and its streamed output."""
+    """One generation request and its streamed output.
+
+    Timing contract: ``t_created`` is stamped at construction;
+    ``t_submit`` is stamped by :meth:`Scheduler.submit` (NOT at
+    construction — a router may hold a request arbitrarily long before
+    handing it to an engine, and that hold must not be silently folded
+    into the engine's queue-wait).  ``ttft`` measures from engine
+    submission; ``ttft_e2e`` from creation (the SLO-relevant latency a
+    fleet router is judged on).
+    """
 
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    tenant: str = "default"          # fair-admission bucket in a fleet
+    ttft_slo_s: Optional[float] = None   # None -> no TTFT target
     rid: int = field(default_factory=lambda: next(_rids))
     state: str = WAITING
     slot: Optional[int] = None
     tokens: List[int] = field(default_factory=list)   # generated so far
     prefill_progress: int = 0        # prompt tokens already in the pages
-    t_submit: float = field(default_factory=time.perf_counter)
+    t_created: float = field(default_factory=time.perf_counter)
+    t_submit: Optional[float] = None                  # entered a scheduler
     t_admit: Optional[float] = None                   # left the queue
     t_first: Optional[float] = None                   # first-token time
     t_done: Optional[float] = None
@@ -70,7 +96,17 @@ class Request:
 
     @property
     def ttft(self) -> Optional[float]:
-        return None if self.t_first is None else self.t_first - self.t_submit
+        """First-token latency from engine submission."""
+        if self.t_first is None:
+            return None
+        return self.t_first - (self.t_submit if self.t_submit is not None
+                               else self.t_created)
+
+    @property
+    def ttft_e2e(self) -> Optional[float]:
+        """First-token latency from construction (includes any router /
+        dispatch hold before the request reached an engine)."""
+        return None if self.t_first is None else self.t_first - self.t_created
 
 
 class Scheduler:
@@ -84,7 +120,11 @@ class Scheduler:
         self.running: Dict[int, Request] = {}        # slot -> request
         self.n_finished = 0
 
-    def submit(self, req: Request) -> Request:
+    def check(self, req: Request) -> List[Dict[str, str]]:
+        """Every reason this scheduler could never serve ``req`` (empty
+        when servable).  Factored out of :meth:`submit` so a fleet
+        router can validate against an engine's shapes without
+        enqueueing."""
         errors: List[Dict[str, str]] = []
 
         def err(field_, code, msg):
@@ -113,16 +153,32 @@ class Scheduler:
             err("max_new_tokens", "exceeds_pool",
                 f"request needs {self.alloc.pages_for(total)} pages; "
                 f"each pool shard has {usable}")
+        return errors
+
+    def submit(self, req: Request) -> Request:
+        errors = self.check(req)
         if errors:
             raise SubmitError(errors)
+        # queue-wait starts NOW — not at construction (a router may have
+        # held the request; that hold is t_submit - t_created)
+        req.t_submit = time.perf_counter()
         self.waiting.append(req)
         return req
 
     def admit(self) -> List[Request]:
         """Move admissible waiting requests into slots (length-aware
-        first-fit in arrival order)."""
+        first-fit in arrival order).
+
+        The pass ends early the moment no remaining candidate can
+        possibly fit: when slots run out, or when even the *smallest*
+        queued request needs more pages than the best-provisioned shard
+        with a free slot has left.  Free pages only shrink during the
+        pass, so breaking is sound — and it keeps a long router backlog
+        from costing an O(queue) rescan on every page-starved tick.
+        """
         admitted = []
         skipped: Deque[Request] = deque()
+        min_need = None             # smallest worst-case page need queued
         while self.waiting:
             req = self.waiting.popleft()
             if self.alloc.can_admit(len(req.prompt), req.max_new_tokens):
@@ -140,6 +196,14 @@ class Scheduler:
             else:
                 skipped.append(req)
                 if not self.alloc.free_slots:
+                    break
+                if min_need is None:
+                    min_need = min(
+                        self.alloc.pages_for(len(r.prompt)
+                                             + max(r.max_new_tokens, 0))
+                        for r in itertools.chain([req], self.waiting,
+                                                 skipped))
+                if self.alloc.max_admit_pages() < min_need:
                     break
         self.waiting = skipped + self.waiting
         return admitted

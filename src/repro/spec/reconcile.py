@@ -92,8 +92,11 @@ class WorkloadReconciler:
             raise SpecError(errors)
         ex = self._executor_for(spec, cfg, strategy,
                                 dict(executor_opts or {}))
+        # a replicated serve fleet binds ONE allocation covering every
+        # replica; the executor slices it into per-replica submeshes
+        replicas = spec.serve.replicas if spec.kind == "serve" else 1
         job = self.instance.submit(JobSpec(
-            n_nodes=spec.resources.n_nodes,
+            n_nodes=spec.resources.n_nodes * max(replicas, 1),
             walltime=spec.walltime,
             user=spec.user,
             urgency=spec.urgency,
@@ -101,6 +104,7 @@ class WorkloadReconciler:
             attributes={"workload": spec.kind,
                         "pod_local": spec.resources.pod_local,
                         "elastic": spec.resources.elastic,
+                        "replicas": max(replicas, 1),
                         "spec_name": spec.name},
             args=self._job_args(spec)))
         handle = WorkloadHandle(spec, job, ex, self.instance.clock)
@@ -120,7 +124,8 @@ class WorkloadReconciler:
             return {}
         s = spec.serve
         return {"max_new": s.max_new, "temperature": s.temperature,
-                "n_requests": s.n_requests}
+                "n_requests": s.n_requests, "replicas": s.replicas,
+                "tenant": s.tenant, "ttft_slo_s": s.ttft_slo_s}
 
     # -- cluster-aware validation ------------------------------------------
     def _cluster_errors(self, spec, cfg, strategy):
@@ -133,10 +138,15 @@ class WorkloadReconciler:
                 "elastic workloads need a MiniCluster-managed instance "
                 "(resize events come from FluxMiniCluster.patch_size)"))
         capacity = self._capacity()
-        if capacity and r.n_nodes > capacity:
+        replicas = spec.serve.replicas if spec.kind == "serve" else 1
+        need = r.n_nodes * max(replicas, 1)
+        if capacity and need > capacity:
+            detail = (f"n_nodes={r.n_nodes}" if replicas <= 1 else
+                      f"replicas={replicas} x n_nodes={r.n_nodes} = "
+                      f"{need} hosts")
             errs.append(_err(
                 "resources.n_nodes", "over-capacity",
-                f"n_nodes={r.n_nodes} exceeds the cluster's maximum of "
+                f"{detail} exceeds the cluster's maximum of "
                 f"{capacity} hosts — the job could never be scheduled"))
         if spec.kind == "serve":
             if cfg.encoder_layers:
@@ -225,6 +235,16 @@ class WorkloadReconciler:
                 clock, net, n_requests=s.n_requests, max_new=s.max_new,
                 strategy=strategy, engine_config=spec.engine_config(),
                 cfg=cfg, **opts).bind(mc)
+        elif spec.kind == "serve" and spec.serve.replicas > 1:
+            from repro.core.executor import FleetServeExecutor
+            s = spec.serve
+            ex = FleetServeExecutor(
+                clock, net, replicas=s.replicas,
+                nodes_per_replica=spec.resources.n_nodes,
+                n_requests=s.n_requests, max_new=s.max_new,
+                tenant=s.tenant, ttft_slo_s=s.ttft_slo_s,
+                strategy=strategy, engine_config=spec.engine_config(),
+                cfg=cfg, **opts)
         elif spec.kind == "serve":
             from repro.core.executor import ServeExecutor
             s = spec.serve

@@ -111,6 +111,9 @@ class ServeSpec:
     n_requests: int = 2           # synthetic batch when no prompts given
     prefill_chunk: int = 0        # >0: chunked prefill inside decode ticks
     dp_shards: int = 1            # page-pool shards over the data tier
+    replicas: int = 1             # >1: a Router over N engine replicas
+    tenant: str = "default"       # fair-admission bucket for the batch
+    ttft_slo_s: float = 0.0       # 0 -> no TTFT target (dispatch order)
 
 
 @dataclass
@@ -292,9 +295,20 @@ class WorkloadSpec:
         ok = _check_num(errs, "serve.prefill_chunk", s.prefill_chunk, 0) \
             and ok
         ok = _check_num(errs, "serve.dp_shards", s.dp_shards, 1) and ok
+        ok = _check_num(errs, "serve.replicas", s.replicas, 1) and ok
         _check_num(errs, "serve.temperature", s.temperature, 0)
+        _check_num(errs, "serve.ttft_slo_s", s.ttft_slo_s, 0)
+        if not isinstance(s.tenant, str) or not s.tenant:
+            errs.append(_err("serve.tenant", "bad-type",
+                             "tenant must be a non-empty string"))
         if not ok:
             return errs                 # derived checks need sane values
+        if s.replicas > 1 and self.resources.elastic:
+            errs.append(_err(
+                "serve.replicas", "unsupported",
+                "replicas > 1 with resources.elastic is not supported: "
+                "the fleet scales by replica count (the autoscaler "
+                "signal), not by resizing one engine in place"))
         if s.dp_shards > 1 and s.n_slots % s.dp_shards:
             errs.append(_err("serve.dp_shards", "bad-value",
                              f"dp_shards={s.dp_shards} must divide "

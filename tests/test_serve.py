@@ -637,3 +637,96 @@ def test_minicluster_allocation_hosts_serve_engine():
     if len(jax.devices()) >= 8:
         assert rec["mesh_shape"] == (2, 4)
         assert rec["n_devices"] == 8
+
+# ---------------------------------------------------------------------------
+# Stats accounting, TTFT stamping, stream truncation (fleet bugfix sweep)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_page_conservation_dp_sharded():
+    """Page conservation under dp_shards > 1: at every tick,
+    free_pages + pages_in_use must equal the usable pool (n_pages minus
+    one null page per shard)."""
+    mesh = _mesh_2x4()
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(n_slots=4, page_size=4, max_seq_len=32,
+                        max_prompt_len=8, dp_shards=2)
+    eng = Engine(TINY, ecfg, strategy=BASELINE, mesh=mesh, params=params)
+    usable = eng.layout.n_pages - eng.layout.n_shards
+    reqs = [eng.submit(p, max_new_tokens=6)
+            for p in ([1, 2, 3, 4, 5], [7, 8, 9], [11, 12], [2, 4, 6])]
+    while eng.step():
+        s = eng.stats()
+        assert s["free_pages"] + s["pages_in_use"] == usable
+    assert all(r.finished for r in reqs)
+    s = eng.stats()
+    assert s["pages_in_use"] == 0 and s["free_pages"] == usable
+
+
+def test_ttft_stamped_at_submit_not_construction():
+    """A router may hold a Request before handing it to an engine; that
+    hold must not be folded into the engine's queue-wait.  t_submit is
+    stamped by Scheduler.submit, t_created at construction."""
+    import time as _time
+    layout = PagedLayout(page_size=4, pages_per_slot=4, n_pages=9)
+    sched = Scheduler(PageAllocator(2, layout), max_prompt_len=8)
+    req = Request(prompt=[1, 2, 3], max_new_tokens=2)
+    assert req.t_submit is None
+    _time.sleep(0.02)                       # the router hold
+    sched.submit(req)
+    assert req.t_submit is not None
+    assert req.t_submit - req.t_created >= 0.015
+
+
+def test_ttft_excludes_pre_submit_hold_on_engine():
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    eng = Engine(TINY, ECFG, params=params)
+    import time as _time
+    req = Request(prompt=[1, 2, 3], max_new_tokens=2)
+    _time.sleep(0.02)
+    eng.scheduler.submit(req)
+    eng.run()
+    assert req.finished
+    # engine-side TTFT excludes the hold; end-to-end TTFT includes it
+    assert req.ttft_e2e - req.ttft >= 0.015
+
+
+def test_stream_raises_on_foreign_request():
+    """Streaming a request the engine does not own must raise a
+    structured StreamError, not silently end the iterator."""
+    from repro.serve import StreamError
+    params = Model(TINY).init(jax.random.PRNGKey(0))
+    a = Engine(TINY, ECFG, params=params)
+    b = Engine(TINY, ECFG, params=params)
+    req = a.submit([1, 2, 3], max_new_tokens=4)
+    with pytest.raises(StreamError) as exc:
+        list(b.stream(req))
+    assert exc.value.errors[0]["code"] == "foreign_request"
+    assert str(req.rid) in exc.value.errors[0]["message"]
+    # the owning engine still serves it fine
+    assert len(list(a.stream(req))) == 4 and req.finished
+
+
+def test_admit_early_break_skips_queue_rescan(monkeypatch):
+    """When no shard can fit even the smallest waiting request, the
+    admission pass stops after the head instead of rescanning the whole
+    backlog every tick (first-fit order preserved)."""
+    layout = PagedLayout(page_size=4, pages_per_slot=4, n_pages=5)
+    alloc = PageAllocator(4, layout)        # 4 usable pages
+    sched = Scheduler(alloc, max_prompt_len=8)
+    hog = sched.submit(Request(prompt=[1] * 8, max_new_tokens=8))
+    assert sched.admit() == [hog]           # reserves all 4 pages
+    waiting = [sched.submit(Request(prompt=[1] * 4, max_new_tokens=4))
+               for _ in range(10)]
+    calls = []
+    orig = alloc.can_admit
+    monkeypatch.setattr(
+        alloc, "can_admit",
+        lambda *a: (calls.append(a), orig(*a))[1])
+    assert sched.admit() == []
+    assert len(calls) == 1, "pass must break once nothing can fit"
+    assert list(sched.waiting) == waiting   # order untouched
+    # pages free up -> the same queue admits again, first-fit
+    sched.finish(hog)
+    admitted = sched.admit()
+    assert admitted and admitted[0] is waiting[0]

@@ -40,9 +40,19 @@ def main() -> int:
             for e in errors:
                 print(f"  - {e['field']}: {e['message']} [{e['code']}]")
         else:
+            extra = ""
+            if spec.kind == "serve":
+                s = spec.serve
+                fleet = [f"replicas={s.replicas}"] if s.replicas > 1 else []
+                if s.tenant != "default":
+                    fleet.append(f"tenant={s.tenant}")
+                if s.ttft_slo_s:
+                    fleet.append(f"ttft_slo_s={s.ttft_slo_s:g}")
+                if fleet:
+                    extra = ", " + ", ".join(fleet)
             print(f"[validate_spec] ok   {path} "
                   f"(kind={spec.kind}, arch={spec.arch}, "
-                  f"name={spec.name or '-'})")
+                  f"name={spec.name or '-'}{extra})")
     if failed:
         print(f"[validate_spec] {failed}/{len(paths)} spec(s) invalid",
               file=sys.stderr)
