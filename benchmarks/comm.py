@@ -29,8 +29,10 @@ import json
 import os
 import time
 
-OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_comm.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_ROOT, "BENCH_comm.json")
+TRACE_JSON = os.path.join(_ROOT, "TRACE_comm.json")
+METRICS_JSON = os.path.join(_ROOT, "METRICS_comm.json")
 
 STEPS = 5
 
@@ -163,6 +165,13 @@ def main(emit, smoke: bool = False):
     backward_s = section["hierarchical"]["step_time_s"] * bw_share
     overlap = {"backend": jax.default_backend(), "mesh": dict(mesh.shape),
                "backward_share_of_step": bw_share, "backward_s": backward_s}
+    # the overlap model feeds the obs registry (per-bucket cross-pod
+    # bytes / hidden / exposed gauges) and a trace on the modeled
+    # backward axis — comm's slice of METRICS_/TRACE_comm.json
+    from repro.obs import MetricsRegistry, Tracer, provenance, \
+        write_chrome_trace, write_metrics
+    registry = MetricsRegistry()
+    tracer = Tracer()
     for label, nb, compress in (("unbucketed", 1, False),
                                 ("bucketed", n_buckets, False),
                                 ("bucketed_int8", n_buckets, True)):
@@ -170,9 +179,14 @@ def main(emit, smoke: bool = False):
             topo, comm.partition_buckets(defs, nb),
             backward_s=backward_s, compress=compress, block=block)
         overlap[label] = comm.overlap.summarize(sched)
+        comm.overlap.to_metrics(registry, sched, schedule=label,
+                                tracer=tracer)
         emit(f"comm_overlap_{label}", sched.step_time_s * 1e6,
              f"hidden {sched.hidden_frac * 100:.0f}% of "
              f"{sched.cross_pod_s * 1e6:.0f}us cross-pod")
+    meta = provenance(mesh=mesh, bench="comm")
+    write_metrics(METRICS_JSON, registry, meta=meta)
+    write_chrome_trace(TRACE_JSON, tracer, meta=meta)
     overlap["claims"] = {
         "bucketed_hides_half_of_cross_pod":
             overlap["bucketed"]["hidden_frac"] >= 0.5,
@@ -210,6 +224,7 @@ def main(emit, smoke: bool = False):
     if os.path.exists(OUT_JSON):
         with open(OUT_JSON) as f:
             out = json.load(f)
+    out["provenance"] = meta
     out["comm"] = section
     out["overlap"] = overlap
     out["moe_a2a"] = moe_a2a

@@ -19,9 +19,12 @@ import os
 from repro.core import (Autoscaler, FluxMetricsPolicy, FluxMiniCluster,
                         JobSpec, JobState, MiniClusterSpec, NetModel,
                         ResourceGraph, SimClock)
+from repro.obs import (SimTime, Tracer, events_from_sim, provenance,
+                       spans_from_handle, write_chrome_trace)
 
-OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_elasticity.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_ROOT, "BENCH_elasticity.json")
+TRACE_JSON = os.path.join(_ROOT, "TRACE_elasticity.json")
 
 
 def control_plane(emit, out):
@@ -63,8 +66,10 @@ def control_plane(emit, out):
     out["shrink_32_to_4_s"] = clock.now - t0
 
     # autoscaler reaction time: queue burst -> first scale decision
+    # (traced: the decision lands as an autoscale_* why-event)
+    tracer = Tracer(SimTime(clock))
     auto = Autoscaler(clock, mc, FluxMetricsPolicy(max_size=64),
-                      interval=15)
+                      interval=15, tracer=tracer)
     auto.start()
     t0 = clock.now
     for _ in range(30):
@@ -73,6 +78,7 @@ def control_plane(emit, out):
     emit("autoscale_reaction_s", (clock.now - t0) * 1e6,
          f"queue-depth metric -> patch in {clock.now - t0:.1f}s")
     out["autoscale_reaction_s"] = clock.now - t0
+    return tracer
 
 
 def elastic_remesh(emit, out, strict: bool = False):
@@ -109,6 +115,9 @@ def elastic_remesh(emit, out, strict: bool = False):
                                      seq_len=32)),
         cfg=tiny, executor_opts=dict(sim_step_time=20.0))
     ex, job = handle.executor, handle.job
+    # resize spans (graceful_window -> restore) land on resize-<jobid>
+    tracer = Tracer(SimTime(clock))
+    ex.tracer = tracer
     # every wait is time-bounded: a missed condition (heartbeats keep
     # the sim queue alive forever) must fail the assert, never hang
     clock.run(until=clock.now + 50_000,
@@ -140,6 +149,10 @@ def elastic_remesh(emit, out, strict: bool = False):
              f"restore {r['restore_s'] * 1e3:.0f}ms + first chunk "
              f"{r['first_chunk_s'] * 1e3:.0f}ms at step {r['step']} "
              f"-> mesh {tuple(r['mesh_shape'])}")
+    # lift the workload lifecycle + sim records onto the same tracer
+    spans_from_handle(handle, tracer)
+    events_from_sim(clock, tracer)
+    return tracer
 
 
 def serve_remesh(emit, out, strict: bool = False):
@@ -177,6 +190,9 @@ def serve_remesh(emit, out, strict: bool = False):
                                      max_new=gen, n_requests=3)),
         cfg=tiny, executor_opts=dict(sim_tick_time=40.0))
     ex, job = handle.executor, handle.job
+    # park/rebuild/adopt phases land on resize-<jobid>
+    tracer = Tracer(SimTime(clock))
+    ex.tracer = tracer
     t_wall0 = _time.perf_counter()
     clock.run(until=clock.now + 50_000,
               stop_when=lambda: job.jobid in ex.sessions
@@ -210,6 +226,9 @@ def serve_remesh(emit, out, strict: bool = False):
     emit("serve_remesh_ttft_mean_s", rec["ttft_mean_s"] * 1e6,
          f"{rec['n_requests']} requests, {rec['n_tokens']} tokens, "
          f"{out['serve_remesh']['tokens_per_s_wall']:.0f} tok/s wall")
+    spans_from_handle(handle, tracer)
+    events_from_sim(clock, tracer)
+    return tracer
 
 
 def main(emit, smoke: bool = False):
@@ -220,12 +239,20 @@ def main(emit, smoke: bool = False):
     if os.path.exists(OUT_JSON):
         with open(OUT_JSON) as f:
             out = json.load(f)
+    tracers = []
     if not smoke:
-        control_plane(emit, out)
-    elastic_remesh(emit, out, strict=smoke)
-    serve_remesh(emit, out, strict=smoke)
+        tracers.append(control_plane(emit, out))
+    tracers.append(elastic_remesh(emit, out, strict=smoke))
+    tracers.append(serve_remesh(emit, out, strict=smoke))
+    tracers = [t for t in tracers if t is not None]
+    out["provenance"] = provenance(bench="elasticity")
     with open(OUT_JSON, "w") as f:
         json.dump(out, f, indent=2)
+    if tracers:
+        doc = write_chrome_trace(TRACE_JSON, tracers,
+                                 meta=out["provenance"])
+        emit("elasticity_trace", 0.0,
+             f"{len(doc['traceEvents'])} chrome events -> {TRACE_JSON}")
     emit("elasticity_json", 0.0, f"wrote {OUT_JSON}")
 
 

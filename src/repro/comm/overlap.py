@@ -122,3 +122,31 @@ def summarize(sched: OverlapSchedule) -> dict:
              "hidden_s": w.hidden_s, "exposed_s": w.exposed_s}
             for w in sched.windows],
     }
+
+
+def to_metrics(registry, sched: OverlapSchedule, *,
+               schedule: str = "bucketed", tracer=None) -> None:
+    """Publish a schedule into an ``obs.MetricsRegistry`` (per-bucket
+    estimated cross-pod bytes and hidden/exposed time, plus the
+    schedule-level hidden fraction) and, when ``tracer`` is given,
+    record each bucket's transfer window as a span on the trace
+    ``comm-<schedule>`` (the modeled-timeline export the comm bench
+    ships next to its BENCH rows)."""
+    for w in sched.windows:
+        registry.set("comm_bucket_cross_pod_bytes", w.n_bytes,
+                     schedule=schedule, bucket=w.index)
+        registry.set("comm_bucket_hidden_s", w.hidden_s,
+                     schedule=schedule, bucket=w.index)
+        registry.set("comm_bucket_exposed_s", w.exposed_s,
+                     schedule=schedule, bucket=w.index)
+        if tracer is not None:
+            tracer.span("bucket_xfer", f"comm-{schedule}",
+                        w.start_s, w.end_s, bucket=w.index,
+                        n_bytes=w.n_bytes, hidden_s=w.hidden_s,
+                        exposed_s=w.exposed_s)
+    registry.set("comm_hidden_frac", sched.hidden_frac, schedule=schedule)
+    registry.set("comm_modeled_step_time_s", sched.step_time_s,
+                 schedule=schedule)
+    if tracer is not None:
+        tracer.span("backward", f"comm-{schedule}", 0.0, sched.backward_s,
+                    modeled=True)

@@ -16,6 +16,7 @@ from typing import Optional
 
 from repro.core.reconciler import FluxMiniCluster
 from repro.core.sim import SimClock
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclass
@@ -83,7 +84,8 @@ class FleetDemandPolicy:
 
 class Autoscaler:
     def __init__(self, clock: SimClock, mc: FluxMiniCluster, policy,
-                 interval: float = 15.0, stabilization: float = 60.0):
+                 interval: float = 15.0, stabilization: float = 60.0,
+                 metrics: Optional[MetricsRegistry] = None, tracer=None):
         self.clock = clock
         self.mc = mc
         self.policy = policy
@@ -96,6 +98,16 @@ class Autoscaler:
         self._pending_down: Optional[int] = None
         self.decisions = []
         self._running = False
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer                   # optional obs.trace.Tracer
+
+    def _record(self, decision: str, cur: int, want: int) -> None:
+        """Count the decision kind distinctly and (when traced) stamp a
+        why-event on the autoscaler timeline at sim time."""
+        self.metrics.inc("autoscale_decisions_total", decision=decision)
+        if self.tracer is not None:
+            self.tracer.event(f"autoscale_{decision}", "autoscaler",
+                              t=self.clock.now, current=cur, target=want)
 
     def start(self):
         if not self._running:
@@ -117,6 +129,7 @@ class Autoscaler:
             self._pending_down = None          # demand is back — cancel
             self.mc.patch_size(want, source="autoscaler")
             self.decisions.append((self.clock.now, cur, want))
+            self._record("scale_up", cur, want)
         elif want < cur:
             if self.clock.now - self._last_scale_down >= self.stabilization:
                 # the highest recommendation seen inside the window wins
@@ -127,6 +140,7 @@ class Autoscaler:
                 self.mc.patch_size(target, source="autoscaler")
                 self._last_scale_down = self.clock.now
                 self.decisions.append((self.clock.now, cur, target))
+                self._record("scale_down", cur, target)
             else:
                 # inside the window: defer, don't drop — a sustained
                 # drop is applied by the first tick past the window
@@ -134,6 +148,7 @@ class Autoscaler:
                     else max(self._pending_down, want)
                 self.decisions.append(
                     (self.clock.now, cur, want, "deferred"))
+                self._record("deferred", cur, want)
         else:
             self._pending_down = None
         self.clock.call_in(self.interval, self._tick)

@@ -301,6 +301,9 @@ class ElasticTrainExecutor(SubmeshExecutor):
         # lifecycle hook: cb(jobid, phase, **detail) — the workload
         # reconciler wires WorkloadHandle transitions through this
         self.phase_cb = None
+        # optional obs.trace.Tracer: resize phases become spans on the
+        # trace ``resize-<jobid>`` (sim-time axis, wall costs in attrs)
+        self.tracer = None
 
     # -- reconciler event plumbing --------------------------------------------
     def bind(self, minicluster) -> "ElasticTrainExecutor":
@@ -403,6 +406,7 @@ class ElasticTrainExecutor(SubmeshExecutor):
                     "mesh_shape": list(mesh.devices.shape),
                     "restore_s": time.perf_counter() - t0,
                     "t_resize_sim": ses.t_resize_sim,
+                    "t_place_sim": self.clock.now,
                 }
                 ses.t_resize_sim = None
         elif ses.state is None:
@@ -497,11 +501,26 @@ class ElasticTrainExecutor(SubmeshExecutor):
         if ses._resume_rec is not None:
             rec = ses._resume_rec
             rec["first_chunk_s"] = elapsed
+            t0sim = rec.pop("t_resize_sim")
+            t_place = rec.pop("t_place_sim", self.clock.now)
             rec["time_to_resume_s"] = rec["restore_s"] + elapsed
-            rec["sim_resume_gap_s"] = self.clock.now - rec.pop(
-                "t_resize_sim")
+            rec["sim_resume_gap_s"] = self.clock.now - t0sim
             ses.resumes.append(rec)
             ses._resume_rec = None
+            if self.tracer is not None:
+                trn = f"resize-{job.jobid}"
+                self.tracer.span(
+                    "graceful_window", trn, t0sim, t_place,
+                    action="checkpoint", transition=rec["transition"],
+                    source=rec["source"], step=rec["step"])
+                self.tracer.span(
+                    "restore", trn, t_place, self.clock.now,
+                    restore_s=rec["restore_s"], first_chunk_s=elapsed,
+                    mesh_shape=rec["mesh_shape"])
+                self.tracer.event(
+                    "resumed", trn, t=self.clock.now,
+                    time_to_resume_s=rec["time_to_resume_s"],
+                    sim_resume_gap_s=rec["sim_resume_gap_s"])
         dt = (self.sim_step_time * n if self.sim_step_time is not None
               else elapsed * self.time_scale)
         if ses.step >= self.total_steps:
@@ -805,6 +824,9 @@ class ElasticServeExecutor(ServeExecutor):
         self.sessions: Dict[int, _ServeSession] = {}
         self._params: Dict[str, object] = {}     # cfg name -> init params
         self.phase_cb = None
+        # optional obs.trace.Tracer: park/rebuild/adopt become spans on
+        # the trace ``resize-<jobid>`` (sim axis, wall costs in attrs)
+        self.tracer = None
 
     # -- reconciler event plumbing -----------------------------------------
     def bind(self, minicluster) -> "ElasticServeExecutor":
@@ -877,6 +899,11 @@ class ElasticServeExecutor(ServeExecutor):
         self.clock.trace("serve_park", jobid=ses.job.jobid,
                          in_flight=len(ses.parked["running"]),
                          waiting=len(ses.parked["waiting"]))
+        if self.tracer is not None:
+            self.tracer.event("park", f"resize-{ses.job.jobid}",
+                              t=self.clock.now,
+                              in_flight=len(ses.parked["running"]),
+                              waiting=len(ses.parked["waiting"]))
 
     def _restore(self, ses: _ServeSession, eng):
         """Adopt a parked snapshot into a freshly built engine: the pool
@@ -904,9 +931,15 @@ class ElasticServeExecutor(ServeExecutor):
         eng._key = jnp.asarray(p["key"])
         eng.n_prefills, eng.n_decode_steps, eng.n_generated = p["counters"]
         ses.parked = None
+        n_arrivals = len(ses.arrivals)
         for req in ses.arrivals:
             sch.submit(req)
         ses.arrivals = []
+        if self.tracer is not None:
+            self.tracer.event("adopt", f"resize-{ses.job.jobid}",
+                              t=self.clock.now,
+                              in_flight=len(sch.running),
+                              adopted_arrivals=n_arrivals)
 
     def _host_params(self, cfg):
         params = self._params.get(cfg.name)
@@ -1016,6 +1049,7 @@ class ElasticServeExecutor(ServeExecutor):
                 "mesh_shape": list(mesh.devices.shape),
                 "rebuild_s": time.perf_counter() - t0,
                 "t_resize_sim": ses.t_resize_sim,
+                "t_place_sim": self.clock.now,
             }
             ses.t_resize_sim = None
         self.clock.trace("serve_place", jobid=job.jobid,
@@ -1086,11 +1120,26 @@ class ElasticServeExecutor(ServeExecutor):
         if ses._resume_rec is not None and n:
             rec = ses._resume_rec
             rec["first_chunk_s"] = elapsed
+            t0sim = rec.pop("t_resize_sim")
+            t_place = rec.pop("t_place_sim", self.clock.now)
             rec["time_to_resume_s"] = rec["rebuild_s"] + elapsed
-            rec["sim_resume_gap_s"] = self.clock.now - rec.pop(
-                "t_resize_sim")
+            rec["sim_resume_gap_s"] = self.clock.now - t0sim
             ses.resumes.append(rec)
             ses._resume_rec = None
+            if self.tracer is not None:
+                trn = f"resize-{job.jobid}"
+                self.tracer.span(
+                    "graceful_window", trn, t0sim, t_place,
+                    action="park", transition=rec["transition"],
+                    source=rec["source"], tick=rec["tick"])
+                self.tracer.span(
+                    "rebuild", trn, t_place, self.clock.now,
+                    rebuild_s=rec["rebuild_s"], first_chunk_s=elapsed,
+                    mesh_shape=rec["mesh_shape"])
+                self.tracer.event(
+                    "resumed", trn, t=self.clock.now,
+                    time_to_resume_s=rec["time_to_resume_s"],
+                    sim_resume_gap_s=rec["sim_resume_gap_s"])
         served = sum(1 for r in ses.requests if r.finished)
         idle = eng is not None and not eng.scheduler.has_work
         if idle and served >= ses.min_total and ses.pending is None:

@@ -72,6 +72,10 @@ def main():
                     help="TUNED_FLAGS.json from repro.tune.autotune; the "
                          "(arch, mesh) cell's winning XLA flags are "
                          "applied before the backend starts")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the serving "
+                         "section (post-build) into DIR (opt-in; view "
+                         "in Perfetto / TensorBoard)")
     args = ap.parse_args()
 
     tuned = ""
@@ -115,6 +119,9 @@ def main():
                       for _ in range(args.replicas)])
     else:
         eng = Engine(cfg, ecfg, strategy=strategy, mesh=mesh)
+    if args.profile_dir:
+        import jax
+        jax.profiler.start_trace(args.profile_dir)
     t0 = time.perf_counter()                    # serving clock: post-build
     rng = np.random.default_rng(0)
     reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
@@ -124,6 +131,9 @@ def main():
             for _ in range(args.batch)]
     eng.run()
     elapsed = time.perf_counter() - t0
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        print(f"[profile] jax.profiler trace in {args.profile_dir}")
 
     n_tok = sum(len(r.tokens) for r in reqs)
     ttft = [r.ttft for r in reqs]

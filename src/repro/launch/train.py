@@ -61,6 +61,10 @@ def main():
     ap.add_argument("--elastic", action="store_true",
                     help="smoke-only: run grow/shrink mesh phases with "
                          "checkpoint-resharded transitions in between")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the train "
+                         "loop into DIR (opt-in; view in Perfetto / "
+                         "TensorBoard)")
     args = ap.parse_args()
 
     if args.spec:
@@ -86,6 +90,8 @@ def main():
 
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(args.steps // 10, 1))
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
     if args.elastic:
         assert not args.production, "--elastic is a smoke-mode proof"
         nd = len(jax.devices())
@@ -108,6 +114,9 @@ def main():
         tr = Trainer(cfg, tcfg, shape, mesh, strategy=strategy,
                      ckpt_dir=args.ckpt_dir)
         hist = tr.run(args.steps, ckpt_every=args.ckpt_every, log_every=5)
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        print(f"[profile] jax.profiler trace in {args.profile_dir}")
     print(f"final loss: {hist[-1]['loss']:.4f} "
           f"(first {hist[0]['loss']:.4f})")
 

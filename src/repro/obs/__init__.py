@@ -1,0 +1,20 @@
+"""Unified observability: tracing, labelled metrics, timeline export.
+
+Three pieces, consumed across the serve/comm/operator tiers:
+
+* :mod:`repro.obs.trace` — span tracing on an injectable clock
+  (``WallClock`` default, ``TickClock`` for virtual-tick benches,
+  ``SimTime`` over the discrete-event sim);
+* :mod:`repro.obs.metrics` — labelled counter/gauge/histogram registry
+  with JSON snapshot + Prometheus text exposition;
+* :mod:`repro.obs.export` — Chrome-trace-event (Perfetto) JSON, JSONL
+  event logs, and the common BENCH provenance header.
+"""
+from repro.obs.export import (events_from_sim, provenance,  # noqa: F401
+                              spans_from_handle, to_chrome_trace,
+                              write_chrome_trace, write_jsonl,
+                              write_metrics)
+from repro.obs.metrics import MetricsRegistry  # noqa: F401
+from repro.obs.trace import (REQUEST_SPANS, TTFT_SPANS, Clock,  # noqa: F401
+                             SimTime, Span, TickClock, Tracer, WallClock,
+                             ttft_breakdown)

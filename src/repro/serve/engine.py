@@ -16,7 +16,6 @@ sampling (Gumbel-max), exact argmax at ``temperature == 0``.
 """
 from __future__ import annotations
 
-import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Iterator, Optional, Sequence
@@ -30,8 +29,25 @@ from repro.configs.base import ModelConfig, ShardingStrategy, WorkloadShape
 from repro.dist import sharding as shd
 from repro.dist import steps as dsteps
 from repro.models.model import Model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Clock, Tracer, WallClock
 from repro.serve import paging
 from repro.serve.scheduler import Request, Scheduler, StreamError
+
+
+def _counter(metric: str, **labels):
+    """A registry-backed counter exposed as a plain int attribute: the
+    compatibility shim for the legacy ``eng.n_prefills``-style counters
+    (reads hit the registry; writes — the elastic park/restore snapshot
+    tuple-assigns them — become absolute registry puts)."""
+
+    def _get(self) -> int:
+        return int(self.metrics.value(metric, **labels))
+
+    def _set(self, value) -> None:
+        self.metrics.put(metric, value, **labels)
+
+    return property(_get, _set)
 
 
 def sample_tokens(logits, temps, key):
@@ -84,17 +100,42 @@ class EngineConfig:
 
 
 class Engine:
-    """Driver loop: admission -> prefill -> continuous decode."""
+    """Driver loop: admission -> prefill -> continuous decode.
+
+    Observability: every timing stamp flows through ``self.clock`` (an
+    injectable ``obs.trace.Clock``; wall time by default, a tick/sim
+    clock under the event-model benches), counters live in
+    ``self.metrics`` (an ``obs.MetricsRegistry``; the legacy
+    ``n_prefills``-style attributes are shims over it), and an optional
+    ``self.tracer`` records each finished request's lifecycle spans.
+    ``tracer=None`` (default) keeps the hot path untraced.
+    """
+
+    # legacy counter attributes, backed by the metrics registry
+    n_prefills = _counter("serve_prefills_total")
+    n_prefill_tokens = _counter("serve_prefill_tokens_total")
+    n_decode_steps = _counter("serve_ticks_total", kind="decode")
+    n_mixed_steps = _counter("serve_ticks_total", kind="mixed")
+    n_generated = _counter("serve_generated_tokens_total")
+    _pc_hits = _counter("serve_prefill_compile_cache_total", event="hit")
+    _pc_misses = _counter("serve_prefill_compile_cache_total", event="miss")
+    _pc_evictions = _counter("serve_prefill_compile_cache_total",
+                             event="eviction")
 
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig = EngineConfig(),
                  *, strategy: ShardingStrategy = BASELINE, mesh=None,
-                 params=None, seed: int = 0):
+                 params=None, seed: int = 0, clock: Optional[Clock] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         assert not cfg.encoder_layers, \
             "serving engine: decoder-only architectures"
         assert cfg.pos_type in ("rope", "none"), \
             "per-slot positions need rope (or no) position encoding"
         self.cfg = cfg
         self.ecfg = ecfg
+        self.clock = clock if clock is not None else WallClock()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
         self.mesh = mesh if mesh is not None else shd.make_mesh(
             (1, 1), ("data", "model"), devices=jax.devices()[:1])
         self.strategy = strategy
@@ -107,7 +148,8 @@ class Engine:
         self._chunked = ecfg.prefill_chunk > 0 and not cfg.sub_quadratic
         self.scheduler = Scheduler(
             self.alloc, ecfg.max_prompt_len,
-            prefill_chunk=ecfg.prefill_chunk if self._chunked else 0)
+            prefill_chunk=ecfg.prefill_chunk if self._chunked else 0,
+            clock=self.clock)
 
         dshape = WorkloadShape(f"serve{ecfg.n_slots}", "decode",
                                ecfg.max_seq_len, ecfg.n_slots)
@@ -155,9 +197,6 @@ class Engine:
         # padding would leak into it: those archs prefill at exact length
         self._exact_prefill = cfg.sub_quadratic
         self._prefill_cache: OrderedDict = OrderedDict()
-        self._pc_hits = 0
-        self._pc_misses = 0
-        self._pc_evictions = 0
 
         if params is None:
             params = Model(cfg).init(jax.random.PRNGKey(seed))
@@ -170,7 +209,8 @@ class Engine:
         self._key = jax.random.PRNGKey(seed + 1)
         # n_prefills counts prefill COMPUTE passes (one-shot prefills and
         # mixed ticks that consumed prompt tokens) — a prefix-cache hit
-        # that skips prompt work therefore lowers it
+        # that skips prompt work therefore lowers it.  All counters live
+        # in self.metrics; the attribute writes seed their series.
         self.n_prefills = 0
         self.n_prefill_tokens = 0
         self.n_decode_steps = 0
@@ -186,7 +226,7 @@ class Engine:
         return self.scheduler.submit(Request(
             prompt=list(prompt), max_new_tokens=max_new_tokens,
             temperature=temperature, eos_id=eos_id, tenant=tenant,
-            ttft_slo_s=ttft_slo_s))
+            ttft_slo_s=ttft_slo_s, t_created=self.clock.now()))
 
     def _owns(self, req: Request) -> bool:
         """Is ``req`` in this engine's scheduler (queued, mid-prefill,
@@ -271,6 +311,22 @@ class Engine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _tick_obs(self, kind: str, n_tokens: int) -> None:
+        """End-of-tick instrumentation: tick kind, tokens/tick, and the
+        page-pool occupancy per shard AFTER this tick's emits/evictions
+        settled.  Mixed/decode tick counts ride the legacy
+        counter shims (``n_mixed_steps``/``n_decode_steps`` ARE
+        ``serve_ticks_total{kind=...}``); one-shot prefill ticks have
+        no legacy counter, so the tick count increments here."""
+        m = self.metrics
+        if kind == "prefill":
+            m.inc("serve_ticks_total", kind="prefill")
+        m.observe("serve_tokens_per_tick", n_tokens, kind=kind)
+        for shard, used in enumerate(self.alloc.pages_in_use_by_shard()):
+            m.set("serve_pages_in_use", used, shard=shard)
+            m.set("serve_pages_free", len(self.alloc._free[shard]),
+                  shard=shard)
+
     def _prefill_for(self, prompt_len: int):
         """The jitted prefill for this prompt: one fixed-capacity compile
         for attention-only archs, a per-length cache for seq-mixer archs
@@ -317,10 +373,15 @@ class Engine:
         req.tokens.append(tok)
         self.n_generated += 1
         if req.t_first is None:
-            req.t_first = time.perf_counter()
+            req.t_first = self.clock.now()
         if (len(req.tokens) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)):
             self.scheduler.finish(req)
+            if req.ttft is not None:
+                self.metrics.observe("serve_ttft_s", req.ttft)
+                self.metrics.observe("serve_ttft_e2e_s", req.ttft_e2e)
+            if self.tracer is not None:
+                self.tracer.record_request(req)
         else:
             self._next_token[req.slot] = tok
 
@@ -338,7 +399,9 @@ class Engine:
             np.array([req.temperature], np.float32), self._split())
         self.n_prefills += 1
         self.n_prefill_tokens += plen
+        req.t_prefill_done = self.clock.now()
         self._emit(req, int(tok[0]))
+        self._tick_obs("prefill", 1)
 
     def _run_mixed(self, req: Request, start: int, n: int) -> None:
         """One fused tick: decode every fully prefilled slot + consume
@@ -377,8 +440,11 @@ class Engine:
         for s, r_ in active.items():
             self.alloc.advance(s)
             self._emit(r_, int(tok[s]))
-        if self.scheduler.chunk_done(req, n):
+        done = self.scheduler.chunk_done(req, n)
+        if done:
+            req.t_prefill_done = self.clock.now()
             self._emit(req, int(tok[slot]))
+        self._tick_obs("mixed", len(active) + (1 if done else 0))
 
     def _run_decode(self) -> None:
         active = dict(self.scheduler.running)       # slot -> request
@@ -396,6 +462,7 @@ class Engine:
         for slot, req in active.items():
             self.alloc.advance(slot)
             self._emit(req, int(tok[slot]))
+        self._tick_obs("decode", len(active))
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> dict:

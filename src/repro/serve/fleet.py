@@ -21,7 +21,6 @@ the paged-vs-contiguous invariant ``tests/test_serve.py`` pins.
 from __future__ import annotations
 
 import math
-import time
 from collections import OrderedDict, deque
 from typing import Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -29,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Clock, Tracer
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request, StreamError, SubmitError
 
@@ -166,9 +167,22 @@ class Router:
 
     def __init__(self, engines: List[Engine], *,
                  prefix_cache: Optional[bool] = None,
-                 demand_alpha: float = 0.2):
+                 demand_alpha: float = 0.2,
+                 clock: Optional[Clock] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert engines, "a fleet needs at least one engine"
         self.engines = list(engines)
+        # ONE time source for the whole fleet: SLO slack compares the
+        # router's now() against engine-stamped t_created, so the router
+        # defaults to the engines' clock (under a tick/sim clock, raw
+        # wall time here would make slack ordering nondeterministic)
+        self.clock = clock if clock is not None else engines[0].clock
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if tracer is not None:
+            for eng in self.engines:
+                eng.tracer = tracer
         want_cache = prefix_cache is not False
         self.prefix_cache: Optional[PrefixCache] = None
         if want_cache and _cacheable(self.engines):
@@ -194,7 +208,8 @@ class Router:
                ttft_slo_s: Optional[float] = None) -> Request:
         req = Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
                       temperature=temperature, eos_id=eos_id,
-                      tenant=tenant, ttft_slo_s=ttft_slo_s)
+                      tenant=tenant, ttft_slo_s=ttft_slo_s,
+                      t_created=self.clock.now())
         # validate against engine shapes at router-submit time, so an
         # unservable request fails HERE, not after queueing
         errors = self.engines[0].scheduler.check(req)
@@ -202,6 +217,10 @@ class Router:
             raise SubmitError(errors)
         self.pending.append(req)
         self._submitted.add(req.rid)
+        self.metrics.inc("router_submits_total", tenant=tenant)
+        if self.tracer is not None:
+            self.tracer.event("router_submit", f"req-{req.rid}",
+                              t=req.t_created, rid=req.rid, tenant=tenant)
         return req
 
     # -- dispatch -----------------------------------------------------------
@@ -238,7 +257,7 @@ class Router:
     def _dispatch_pass(self) -> int:
         if not self.pending:
             return 0
-        now = time.perf_counter()
+        now = self.clock.now()       # the fleet clock, NOT raw wall time
 
         def slack(req: Request) -> float:
             if req.ttft_slo_s is None:
@@ -254,15 +273,36 @@ class Router:
         for req in order:
             others_queue = any(r.tenant != req.tenant for r in self.pending)
             if others_queue and in_flight.get(req.tenant, 0) >= share:
-                continue                             # fairness: over share
+                # fairness: tenant over its share while others queue
+                self.metrics.inc("router_fairness_skips_total",
+                                 tenant=req.tenant)
+                if self.tracer is not None:
+                    self.tracer.event(
+                        "fairness_skip", f"req-{req.rid}", t=now,
+                        rid=req.rid, tenant=req.tenant,
+                        in_flight=in_flight.get(req.tenant, 0),
+                        share=share)
+                continue
             eng = self._pick_engine(req)
             if eng is None:
+                # no engine can admit it this tick: the request waits
+                self.metrics.inc("router_no_admissible_total")
+                if self.tracer is not None:
+                    self.tracer.event("no_admissible_engine",
+                                      f"req-{req.rid}", t=now,
+                                      rid=req.rid, slack=slack(req))
                 continue
             self.pending.remove(req)
             eng.scheduler.submit(req)
             self._dispatched[req.rid] = req
             in_flight[req.tenant] = in_flight.get(req.tenant, 0) + 1
             self.n_dispatched += 1
+            eng_idx = self.engines.index(eng)
+            self.metrics.inc("router_dispatch_total", engine=eng_idx)
+            if self.tracer is not None:
+                self.tracer.event("dispatch", f"req-{req.rid}", t=now,
+                                  rid=req.rid, engine=eng_idx,
+                                  slack=slack(req))
             n += 1
         return n
 
@@ -289,6 +329,8 @@ class Router:
                     if r.finished]:
             del self._dispatched[rid]
             self._registered.discard(rid)
+        self.metrics.set("router_pending", len(self.pending))
+        self.metrics.set("router_demand_ewma", self._demand)
         return progressed
 
     def run(self) -> None:
@@ -333,6 +375,16 @@ class Router:
     def has_work(self) -> bool:
         return bool(self.pending) or any(
             e.scheduler.has_work for e in self.engines)
+
+    def metrics_view(self) -> MetricsRegistry:
+        """One registry over the fleet: the router's own series plus
+        every engine's, relabelled ``source=router|engine<i>`` (the
+        METRICS_*.json export view; :meth:`stats` stays the legacy
+        summed shim)."""
+        parts = {"router": self.metrics}
+        for i, eng in enumerate(self.engines):
+            parts[f"engine{i}"] = eng.metrics
+        return MetricsRegistry.merged(parts)
 
     def stats(self) -> dict:
         per = [e.stats() for e in self.engines]

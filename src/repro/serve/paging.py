@@ -243,3 +243,13 @@ class PageAllocator:
         nulls = np.array([self.null_page_of(s) for s in range(self.n_slots)],
                          np.int32)
         return int((self.block_table != nulls[:, None]).sum())
+
+    def pages_in_use_by_shard(self) -> List[int]:
+        """Allocated (non-null) page count per pool shard — the
+        occupancy gauge the metrics registry exports per tick."""
+        nulls = np.array([self.null_page_of(s) for s in range(self.n_slots)],
+                         np.int32)
+        used = (self.block_table != nulls[:, None]).sum(axis=1)
+        return [int(used[r * self._slots_per_shard:
+                         (r + 1) * self._slots_per_shard].sum())
+                for r in range(self.n_shards)]

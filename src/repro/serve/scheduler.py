@@ -24,6 +24,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
+from repro.obs.trace import Clock, WallClock
 from repro.serve.paging import PageAllocator
 
 _rids = itertools.count(1)
@@ -71,6 +72,12 @@ class Request:
     into the engine's queue-wait).  ``ttft`` measures from engine
     submission; ``ttft_e2e`` from creation (the SLO-relevant latency a
     fleet router is judged on).
+
+    Every stamp after construction comes from ONE injectable clock (the
+    engine's — see ``repro.obs.trace.Clock``), so sim-time runs get
+    sim-time stamps; Engine/Router construct requests through the same
+    clock, leaving the wall-clock default only for direct
+    ``Request(...)`` construction.
     """
 
     prompt: List[int]
@@ -87,6 +94,7 @@ class Request:
     t_created: float = field(default_factory=time.perf_counter)
     t_submit: Optional[float] = None                  # entered a scheduler
     t_admit: Optional[float] = None                   # left the queue
+    t_prefill_done: Optional[float] = None            # prompt fully in pages
     t_first: Optional[float] = None                   # first-token time
     t_done: Optional[float] = None
 
@@ -111,10 +119,11 @@ class Request:
 
 class Scheduler:
     def __init__(self, alloc: PageAllocator, max_prompt_len: int,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, clock: Optional[Clock] = None):
         self.alloc = alloc
         self.max_prompt_len = max_prompt_len
         self.prefill_chunk = prefill_chunk
+        self.clock = clock if clock is not None else WallClock()
         self.waiting: Deque[Request] = deque()
         self.prefilling: Deque[Request] = deque()    # admitted, mid-prefill
         self.running: Dict[int, Request] = {}        # slot -> request
@@ -161,7 +170,7 @@ class Scheduler:
             raise SubmitError(errors)
         # queue-wait starts NOW — not at construction (a router may have
         # held the request; that hold is t_submit - t_created)
-        req.t_submit = time.perf_counter()
+        req.t_submit = self.clock.now()
         self.waiting.append(req)
         return req
 
@@ -185,7 +194,7 @@ class Scheduler:
                 req.slot = self.alloc.admit(len(req.prompt),
                                             req.max_new_tokens)
                 req.state = RUNNING
-                req.t_admit = time.perf_counter()
+                req.t_admit = self.clock.now()
                 self.running[req.slot] = req
                 admitted.append(req)
                 if self.prefill_chunk > 0:
@@ -236,7 +245,7 @@ class Scheduler:
     def finish(self, req: Request):
         """Evict: free the slot and its pages for re-use."""
         req.state = FINISHED
-        req.t_done = time.perf_counter()
+        req.t_done = self.clock.now()
         del self.running[req.slot]
         self.alloc.free(req.slot)
         self.n_finished += 1

@@ -1,0 +1,127 @@
+"""Render a TRACE_*.json (Chrome trace event) export as text reports.
+
+Two views over the same artifact Perfetto loads:
+
+* ``--requests``: per-request TTFT waterfall — how much of each
+  request's time-to-first-token went to router hold vs queue wait vs
+  prefill vs first decode, as aligned bars plus the decode tail;
+* ``--resizes``: per-resize timeline — the graceful window
+  (checkpoint or park) vs the rebuild/restore phase of every elastic
+  transition, with the recorded wall costs from the span attrs.
+
+No arguments renders both.  Units follow the trace's clock (seconds on
+a wall trace, ticks on a virtual-tick trace — the exporter wrote both
+as the ``ts``/``dur`` microsecond axis, so 1 tick reads as 1e6 us).
+
+    python tools/trace_report.py TRACE_serving.json [--requests]
+    python tools/trace_report.py TRACE_elasticity.json [--resizes]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TTFT_ORDER = ("router_hold", "queue_wait", "prefill", "first_decode")
+BAR_WIDTH = 40
+
+
+def load(path: str):
+    """Return {trace_name: [span dicts sorted by ts]} from a chrome
+    trace export (tid -> trace name via thread_name metadata)."""
+    with open(path) as f:
+        doc = json.load(f)
+    names = {}
+    for ev in doc.get("traceEvents", []):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            names[ev["tid"]] = ev["args"]["name"]
+    traces: dict = {}
+    for ev in doc.get("traceEvents", []):
+        if ev.get("ph") != "X":
+            continue
+        trace = names.get(ev.get("tid"), f"tid-{ev.get('tid')}")
+        traces.setdefault(trace, []).append(ev)
+    for spans in traces.values():
+        spans.sort(key=lambda e: e["ts"])
+    return doc, traces
+
+
+def _bar(frac: float) -> str:
+    n = int(round(frac * BAR_WIDTH))
+    return "#" * n + "." * (BAR_WIDTH - n)
+
+
+def report_requests(traces: dict) -> int:
+    reqs = {t: s for t, s in traces.items() if t.startswith("req-")}
+    if not reqs:
+        print("no request traces (req-*) in this export")
+        return 0
+    print(f"== TTFT waterfall: {len(reqs)} request(s) ==")
+    for trace in sorted(reqs, key=lambda t: min(s["ts"]
+                                                for s in reqs[t])):
+        spans = {s["name"]: s for s in reqs[trace]}
+        parts = [(n, spans[n]["dur"]) for n in TTFT_ORDER if n in spans]
+        if not parts:
+            continue
+        ttft = sum(d for _, d in parts)
+        tenant = next((s["args"].get("tenant") for s in reqs[trace]
+                       if s["args"].get("tenant")), "-")
+        decode = spans.get("decode", {}).get("dur", 0.0)
+        print(f"\n{trace} (tenant {tenant}): "
+              f"ttft_e2e {ttft / 1e6:.6g}s + decode {decode / 1e6:.6g}s")
+        for name, dur in parts:
+            frac = dur / ttft if ttft else 0.0
+            print(f"  {name:<12} {_bar(frac)} "
+                  f"{dur / 1e6:.6g}s ({frac * 100:5.1f}%)")
+    return 0
+
+
+def report_resizes(traces: dict) -> int:
+    rs = {t: s for t, s in traces.items() if t.startswith("resize-")}
+    if not rs:
+        print("no resize traces (resize-*) in this export")
+        return 0
+    print(f"== resize timelines: {len(rs)} workload(s) ==")
+    for trace in sorted(rs):
+        print(f"\n{trace}:")
+        for sp in rs[trace]:
+            args = sp.get("args", {})
+            detail = []
+            for key in ("action", "transition", "source", "step",
+                        "restore_s", "rebuild_s", "first_chunk_s",
+                        "mesh_shape"):
+                if key in args:
+                    val = args[key]
+                    if isinstance(val, float):
+                        val = f"{val:.4g}"
+                    detail.append(f"{key}={val}")
+            print(f"  t={sp['ts'] / 1e6:>10.6g}  "
+                  f"{sp['name']:<16} {sp['dur'] / 1e6:.6g}s  "
+                  f"{' '.join(detail)}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="TRACE_*.json (chrome trace export)")
+    ap.add_argument("--requests", action="store_true",
+                    help="per-request TTFT waterfall only")
+    ap.add_argument("--resizes", action="store_true",
+                    help="per-resize timeline only")
+    args = ap.parse_args()
+
+    doc, traces = load(args.trace)
+    meta = doc.get("otherData", {})
+    print(f"{args.trace}: {sum(len(s) for s in traces.values())} spans "
+          f"on {len(traces)} trace(s); backend={meta.get('backend')} "
+          f"git={meta.get('git_sha')} at {meta.get('timestamp')}")
+    both = not (args.requests or args.resizes)
+    if args.requests or both:
+        report_requests(traces)
+    if args.resizes or both:
+        report_resizes(traces)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

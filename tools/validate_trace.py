@@ -1,0 +1,195 @@
+"""Validate exported observability artifacts (CI observability smoke).
+
+Checks a Chrome-trace-event export (``TRACE_*.json``), a JSONL span
+log (``TRACE_*.jsonl``) or a metrics snapshot (``METRICS_*.json``) for
+structural soundness:
+
+* chrome traces: ``traceEvents`` is a list; every ``ph:"X"`` event has
+  name/ts and a non-negative ``dur``; no event carries the
+  ``unclosed`` marker (an open span at export time is a bug); every
+  referenced ``tid`` has a ``thread_name`` metadata event; the
+  ``otherData`` provenance header carries backend/jax_version/git_sha/
+  timestamp;
+* jsonl logs: each line parses; span records have ``t_end >= t_start``
+  (no unclosed spans), event records have a ``t``;
+* metrics snapshots: provenance header plus ``counters``/``gauges``/
+  ``histograms`` lists with name/labels/value shapes, histogram
+  buckets cumulative-monotone.
+
+Non-zero exit on any malformed artifact; CI fails the step.
+
+    python tools/validate_trace.py TRACE_serving.json \
+        TRACE_serving.jsonl METRICS_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+PROVENANCE_KEYS = ("backend", "jax_version", "git_sha", "timestamp")
+
+
+def _check_provenance(doc: dict, errors: list, where: str) -> None:
+    if not isinstance(doc, dict):
+        errors.append(f"{where}: provenance header is not an object")
+        return
+    for key in PROVENANCE_KEYS:
+        if key not in doc:
+            errors.append(f"{where}: provenance missing {key!r}")
+
+
+def check_chrome(doc) -> list:
+    errors: list = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["not a chrome trace: no traceEvents key"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    named_tids = set()
+    used_tids = set()
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M"):
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if "name" not in ev or "pid" not in ev:
+            errors.append(f"{where}: missing name/pid")
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                named_tids.add(ev.get("tid"))
+            continue
+        used_tids.add(ev.get("tid"))
+        if not isinstance(ev.get("ts"), (int, float)):
+            errors.append(f"{where}: non-numeric ts")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)):
+                errors.append(f"{where}: complete event without dur")
+            elif dur < 0:
+                errors.append(f"{where}: negative dur {dur}")
+        if isinstance(ev.get("args"), dict) and ev["args"].get("unclosed"):
+            errors.append(f"{where}: unclosed span "
+                          f"{ev.get('name')!r} exported")
+    for tid in sorted(used_tids - named_tids, key=str):
+        errors.append(f"tid {tid} has no thread_name metadata")
+    _check_provenance(doc.get("otherData"), errors, "otherData")
+    return errors
+
+
+def check_jsonl(lines) -> list:
+    errors: list = []
+    for i, line in enumerate(lines):
+        where = f"line {i + 1}"
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{where}: bad json ({e})")
+            continue
+        kind = rec.get("kind")
+        if kind == "span":
+            if rec.get("t_end") is None:
+                errors.append(f"{where}: unclosed span "
+                              f"{rec.get('name')!r}")
+            elif rec["t_end"] < rec["t_start"]:
+                errors.append(f"{where}: span ends before it starts")
+        elif kind == "event":
+            if not isinstance(rec.get("t"), (int, float)):
+                errors.append(f"{where}: event without numeric t")
+        else:
+            errors.append(f"{where}: unknown record kind {kind!r}")
+        if "trace" not in rec or "name" not in rec:
+            errors.append(f"{where}: missing trace/name")
+    return errors
+
+
+def check_metrics(doc) -> list:
+    errors: list = []
+    if not isinstance(doc, dict):
+        return ["not an object"]
+    _check_provenance(doc.get("provenance"), errors, "provenance")
+    for family in ("counters", "gauges", "histograms"):
+        rows = doc.get(family)
+        if not isinstance(rows, list):
+            errors.append(f"{family}: missing or not a list")
+            continue
+        for i, row in enumerate(rows):
+            where = f"{family}[{i}]"
+            if not isinstance(row.get("name"), str):
+                errors.append(f"{where}: missing name")
+            if not isinstance(row.get("labels"), dict):
+                errors.append(f"{where}: missing labels")
+            if family == "histograms":
+                for key in ("count", "sum"):
+                    if not isinstance(row.get(key), (int, float)):
+                        errors.append(f"{where}: missing {key}")
+                buckets = row.get("buckets", [])
+                counts = [b.get("count", 0) for b in buckets]
+                if counts != sorted(counts):
+                    errors.append(f"{where}: bucket counts not "
+                                  f"cumulative-monotone")
+            elif not isinstance(row.get("value"), (int, float)):
+                errors.append(f"{where}: missing value")
+    return errors
+
+
+def check_file(path: str) -> list:
+    if path.endswith(".jsonl"):
+        with open(path) as f:
+            return check_jsonl(f.readlines())
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            return [f"bad json ({e})"]
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return check_chrome(doc)
+    return check_metrics(doc)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+",
+                    help="TRACE_*.json / TRACE_*.jsonl / METRICS_*.json "
+                         "(globs ok)")
+    args = ap.parse_args()
+
+    paths = []
+    for pattern in args.artifacts:
+        hits = sorted(glob.glob(pattern))
+        if not hits:
+            print(f"[validate_trace] {pattern}: no such file",
+                  file=sys.stderr)
+            return 2
+        paths.extend(hits)
+
+    failed = 0
+    for path in paths:
+        errors = check_file(path)
+        if errors:
+            failed += 1
+            print(f"[validate_trace] FAIL {path}:")
+            for e in errors[:20]:
+                print(f"  - {e}")
+            if len(errors) > 20:
+                print(f"  ... and {len(errors) - 20} more")
+        else:
+            print(f"[validate_trace] ok   {path}")
+    if failed:
+        print(f"[validate_trace] {failed}/{len(paths)} artifact(s) "
+              f"malformed", file=sys.stderr)
+        return 1
+    print(f"[validate_trace] all {len(paths)} artifact(s) well-formed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
