@@ -1,0 +1,182 @@
+"""Pipeline tier: canary checkpoint promotion into a LIVE fleet.
+
+The flagship flow the pipeline subsystem exists for: a train stage
+produces a checkpoint, an eval gate reads its stamped result, and a
+promote stage rolls the trained params into a *running* 2-replica
+elastic serve fleet replica by replica (snapshot -> rebuild with new
+params -> adopt) while requests are mid-decode.  Records into
+``BENCH_pipeline.json``:
+
+* ``sim_promote_s`` — time-to-promote across the whole fleet;
+* ``in_flight_at_begin`` / per-replica ``in_flight`` — requests live
+  while their engine was swapped;
+* the zero-loss claim — every request finishes with its full token
+  budget, none dropped, none restarted (``--smoke`` FAILS the step if
+  the claim does not hold).
+
+Standalone (the CI pipeline smoke):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.pipeline --smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import (FluxMiniCluster, MiniClusterSpec, NetModel,
+                        ResourceGraph, SimClock)
+from repro.obs import (SimTime, Tracer, events_from_sim, provenance,
+                       spans_from_handle, spans_from_pipeline,
+                       write_chrome_trace)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_ROOT, "BENCH_pipeline.json")
+TRACE_JSON = os.path.join(_ROOT, "TRACE_pipeline.json")
+
+MAX_NEW = 24
+N_REQ = 4
+
+
+def _canary_spec():
+    from repro.flow import (GateSpec, PipelineSpec, PromoteSpec, StageSpec,
+                            TriggerSpec)
+    from repro.spec import (ResourceSpec, ServeSpec, TrainSpec,
+                            WorkloadSpec)
+    fleet = WorkloadSpec(
+        kind="serve", arch="bench-pipe", name="canary-fleet",
+        resources=ResourceSpec(n_nodes=1, elastic=True),
+        serve=ServeSpec(n_slots=2, page_size=8, max_prompt_len=24,
+                        max_seq_len=40, max_new=MAX_NEW, n_requests=N_REQ,
+                        replicas=2, tenant="canary"))
+    train = WorkloadSpec(
+        kind="train", arch="bench-pipe", name="canary-train",
+        resources=ResourceSpec(n_nodes=2, elastic=True),
+        train=TrainSpec(total_steps=4, global_batch=8, seq_len=32,
+                        chunk_steps=2))
+    return PipelineSpec(name="bench-canary", stages=[
+        StageSpec(name="fleet", kind="workload", workload=fleet),
+        StageSpec(name="train", kind="workload", workload=train),
+        StageSpec(name="eval-gate", kind="gate", depends_on=["train"],
+                  gate=GateSpec(metric="final_loss", op="lt", value=50.0),
+                  trigger=TriggerSpec()),
+        StageSpec(name="promote", kind="promote", depends_on=["eval-gate"],
+                  promote=PromoteSpec(from_stage="train", target="fleet",
+                                      note="bench canary")),
+    ])
+
+
+def canary_promotion(emit, out, strict: bool = False):
+    """Run the full train -> gate -> promote pipeline against a live
+    fleet and measure the roll."""
+    import jax
+    if len(jax.devices()) < 8:
+        msg = (f"needs 8 devices, have {len(jax.devices())} (set "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        if strict:
+            # the CI smoke exists to exercise this path: an environment
+            # that cannot run it must FAIL the step, not stay green
+            raise SystemExit(f"pipeline --smoke: {msg}")
+        emit("pipeline_skipped", 0.0, msg)
+        return
+    from repro.configs.base import ModelConfig
+    tiny = ModelConfig(name="bench-pipe", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab_size=256)
+    clock = SimClock(seed=4)
+    graph = ResourceGraph(n_pods=1, hosts_per_pod=4, chips_per_host=2)
+    mc = FluxMiniCluster(clock, NetModel(), graph,
+                         MiniClusterSpec(name="pipe", size=4, max_size=4))
+    mc.create(); mc.wait_ready()
+    handle = mc.apply_pipeline(_canary_spec(), stage_opts={
+        # serve ticks dominate the sim timeline so the train stage
+        # (1s/step) lands its checkpoint while the fleet is mid-decode
+        "fleet": {"cfg": tiny, "executor_opts": dict(sim_tick_time=5.0)},
+        "train": {"cfg": tiny, "executor_opts": dict(sim_step_time=1.0)},
+    })
+    tracer = Tracer(SimTime(clock))
+    fl = handle.stages["fleet"]
+    clock.run(until=clock.now + 50_000,
+              stop_when=lambda: fl.phase == "Running"
+              and fl.handle is not None)
+    fl.handle.executor.tracer = tracer   # promo-<jobid> roll events
+    clock.run(until=clock.now + 100_000, stop_when=lambda: handle.done)
+    assert handle.phase == "Completed", handle.status()
+
+    promo = handle.stages["promote"].result
+    fwh = fl.handle
+    rec = fwh.executor.ran[fwh.job.jobid]
+    tok_lens = [len(t) for t in rec["tokens"]]
+    zero_loss = (rec["n_requests"] == N_REQ
+                 and all(n == MAX_NEW for n in tok_lens)
+                 and rec["version"] == promo["to_version"])
+    out["canary"] = {
+        "pipeline_phase": handle.phase,
+        "stages": {n: st.phase for n, st in handle.stages.items()},
+        "gate": handle.stages["eval-gate"].result,
+        "sim_promote_s": promo["sim_promote_s"],
+        "in_flight_at_begin": promo["in_flight_at_begin"],
+        "replicas": promo["replicas"],
+        "per_replica_steps": promo["steps"],
+        "fleet_version": rec["version"],
+        "n_requests": rec["n_requests"],
+        "token_lens": tok_lens,
+        "zero_loss": zero_loss,
+    }
+    emit("pipeline_promote_s", promo["sim_promote_s"] * 1e6,
+         f"{promo['replicas']} replicas rolled in "
+         f"{promo['sim_promote_s']:.1f}s sim, "
+         f"{promo['in_flight_at_begin']} requests in flight at begin")
+    for step in promo["steps"]:
+        emit(f"pipeline_promote_replica{step['replica']}_in_flight",
+             step["in_flight"] * 1e6,
+             f"{step['in_flight']} mid-decode at swap "
+             f"(token progress {step['token_progress']})")
+    emit("pipeline_zero_loss", float(zero_loss) * 1e6,
+         f"{rec['n_requests']}/{N_REQ} requests, token lens {tok_lens} "
+         f"(budget {MAX_NEW}), fleet at version {rec['version']}")
+    if strict and not zero_loss:
+        raise SystemExit(f"pipeline --smoke: promotion dropped work: "
+                         f"{out['canary']}")
+    if strict and promo["in_flight_at_begin"] == 0:
+        raise SystemExit("pipeline --smoke: promotion landed on an idle "
+                         "fleet — the canary claim was not exercised")
+    spans_from_pipeline(handle, tracer)
+    for st in handle.stages.values():
+        for wh in st.handles:
+            spans_from_handle(wh, tracer)
+    events_from_sim(clock, tracer,
+                    kinds=("pipeline_applied", "pipeline_stage",
+                           "pipeline_gate", "pipeline_done",
+                           "fleet_place", "fleet_scale_up"))
+    return tracer
+
+
+def main(emit, smoke: bool = False):
+    # read-modify-write: each section overwrites ONLY its own keys, so
+    # a partial run never drops the other sections from the artifact
+    out = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            out = json.load(f)
+    tracers = [canary_promotion(emit, out, strict=smoke)]
+    tracers = [t for t in tracers if t is not None]
+    out["provenance"] = provenance(bench="pipeline")
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    if tracers:
+        doc = write_chrome_trace(TRACE_JSON, tracers,
+                                 meta=out["provenance"])
+        emit("pipeline_trace", 0.0,
+             f"{len(doc['traceEvents'])} chrome events -> {TRACE_JSON}")
+    emit("pipeline_json", 0.0, f"wrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="strict canary run (the CI pipeline smoke)")
+    args = ap.parse_args()
+    main(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"),
+         smoke=args.smoke)

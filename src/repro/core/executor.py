@@ -868,33 +868,17 @@ class ElasticServeExecutor(ServeExecutor):
     # -- park / restore -----------------------------------------------------
     def _drain_and_park(self, ses: _ServeSession):
         """Give in-flight slots up to ``drain_ticks`` normal ticks to
-        finish, then freeze the engine host-side.  Drain ticks are
-        ordinary ticks (they happen in an uninterrupted run too), so
-        parking never perturbs the token stream."""
-        import jax
+        finish, then freeze the engine host-side
+        (``Engine.snapshot_state``).  Drain ticks are ordinary ticks
+        (they happen in an uninterrupted run too), so parking never
+        perturbs the token stream."""
         eng = ses.engine
         for _ in range(self.drain_ticks):
             if not eng.scheduler.running:
                 break
             if eng.step():
                 ses.ticks += 1
-        al, sch = eng.alloc, eng.scheduler
-        ses.parked = {
-            "pool": jax.device_get(eng.pool),
-            "block_table": al.block_table.copy(),
-            "lengths": al.lengths.copy(),
-            "reserved": al._reserved.copy(),
-            "free_pages": list(al.free_pages),
-            "free_slots": list(al.free_slots),
-            "waiting": list(sch.waiting),
-            "prefilling": list(getattr(sch, "prefilling", ())),
-            "running": dict(sch.running),
-            "n_finished": sch.n_finished,
-            "next_token": eng._next_token.copy(),
-            "key": jax.device_get(eng._key),
-            "counters": (eng.n_prefills, eng.n_decode_steps,
-                         eng.n_generated),
-        }
+        ses.parked = eng.snapshot_state()
         ses.engine = None
         self.clock.trace("serve_park", jobid=ses.job.jobid,
                          in_flight=len(ses.parked["running"]),
@@ -906,35 +890,17 @@ class ElasticServeExecutor(ServeExecutor):
                               waiting=len(ses.parked["waiting"]))
 
     def _restore(self, ses: _ServeSession, eng):
-        """Adopt a parked snapshot into a freshly built engine: the pool
-        reshards onto the new mesh, host bookkeeping copies over, and
-        requests that arrived mid-resize join the waiting queue in
-        submission order."""
-        from collections import deque
-
-        import jax
-        import jax.numpy as jnp
-        p = ses.parked
-        eng.pool = jax.tree_util.tree_map(
-            lambda x, s: jax.device_put(x, s), p["pool"], eng._pool_sh)
-        al, sch = eng.alloc, eng.scheduler
-        al.block_table[:] = p["block_table"]
-        al.lengths[:] = p["lengths"]
-        al._reserved[:] = p["reserved"]
-        al.free_pages = list(p["free_pages"])
-        al.free_slots = list(p["free_slots"])
-        sch.waiting = deque(p["waiting"])
-        sch.prefilling = deque(p.get("prefilling", ()))
-        sch.running = dict(p["running"])
-        sch.n_finished = p["n_finished"]
-        eng._next_token[:] = p["next_token"]
-        eng._key = jnp.asarray(p["key"])
-        eng.n_prefills, eng.n_decode_steps, eng.n_generated = p["counters"]
+        """Adopt a parked snapshot into a freshly built engine
+        (``Engine.adopt_state``: the pool reshards onto the new mesh,
+        host bookkeeping copies over), then requests that arrived
+        mid-resize join the waiting queue in submission order."""
+        eng.adopt_state(ses.parked)
         ses.parked = None
         n_arrivals = len(ses.arrivals)
         for req in ses.arrivals:
-            sch.submit(req)
+            eng.scheduler.submit(req)
         ses.arrivals = []
+        sch = eng.scheduler
         if self.tracer is not None:
             self.tracer.event("adopt", f"resize-{ses.job.jobid}",
                               t=self.clock.now,
@@ -1156,6 +1122,470 @@ class ElasticServeExecutor(ServeExecutor):
                 "ticks": ses.ticks,
                 "n_resumes": len(ses.resumes),
                 "resumes": ses.resumes,
+            }
+            dt = (self.sim_tick_time * max(n, 1)
+                  if self.sim_tick_time is not None
+                  else elapsed * self.time_scale)
+            self.clock.call_in(dt, done, "completed",
+                               self.clock.now + dt - (job.t_run or 0.0))
+        else:
+            dt = (self.sim_tick_time * max(n, 1)
+                  if self.sim_tick_time is not None
+                  else max(elapsed * self.time_scale, 1e-3))
+            self.clock.call_in(dt, self._tick, job, ses, gen, done)
+
+
+@dataclass
+class _FleetSession:
+    """One elastic fleet serve job's state across scale-ups, requeues
+    and rolling promotions."""
+
+    job: Job
+    cfg: object
+    ecfg: object
+    router: object = None             # live Router, None before placement
+    rsets: List[ResourceSet] = field(default_factory=list)  # per replica
+    requests: List = field(default_factory=list)   # every Request served
+    arrivals: List = field(default_factory=list)   # pre-placement submits
+    min_total: int = 0                # requests the job must serve
+    ticks: int = 0                    # router ticks that did work
+    generation: int = 0
+    params: object = None             # CURRENT host-side param tree
+    version: int = 0                  # bumps on each completed promotion
+    pending_replicas: Optional[int] = None   # scale target not yet met
+    pending_source: str = ""
+    promo: Optional[Dict] = None      # in-progress rolling promotion
+    promotions: List[Dict] = field(default_factory=list)
+    scale_events: List[Dict] = field(default_factory=list)
+
+
+class ElasticFleetServeExecutor(ServeExecutor):
+    """A REPLICATED serve fleet that stays live through cluster resizes
+    and checkpoint promotions — :class:`FleetServeExecutor`'s Router
+    over shape-identical replicas, driven with
+    :class:`ElasticServeExecutor`'s chunked tick loop so scale and
+    promotion events land between decode steps, exactly as they would
+    against a production serving tier.
+
+    Two operations distinguish it from the one-shot fleet:
+
+    * **Live scale-up** — a ``FluxMiniCluster.patch_size`` grow (e.g.
+      the autoscaler acting on ``Router.desired_replicas``) sets a
+      pending replica target; at the next tick boundary the executor
+      matches ``nodes_per_replica`` free hosts per missing replica,
+      raises a submesh, warms an engine on the CURRENT params and
+      ``Router.add_engine``s it — requests already in flight never
+      notice.
+    * **Rolling canary promotion** — :meth:`promote` swaps new params
+      into the fleet one replica per tick: freeze the replica
+      (``Engine.snapshot_state``), build+warm a fresh engine with the
+      NEW params on the same mesh, adopt the snapshot
+      (``Engine.adopt_state``), ``Router.swap_engine`` it in place.
+      In-flight requests on the replica continue at the exact token
+      they were parked at; replicas not yet promoted keep generating
+      token-for-token what an unpromoted run would (the sampling key
+      rides each snapshot) — ``tests/test_flow.py`` pins both.  The
+      shared prefix cache is dropped at promotion start: cached KV was
+      computed under the old params.
+
+    A cluster shrink that tears down hosts this fleet holds rides the
+    ordinary requeue path (the fleet rebuilds at the new size;
+    unfinished requests restart from their prompt) — only grow and
+    promotion are pinned lossless.
+    """
+
+    def __init__(self, clock: SimClock, net: NetModel, replicas: int = 2,
+                 nodes_per_replica: int = 1, tenant: str = "default",
+                 ttft_slo_s: float = 0.0, tbon_fanout: int = 2,
+                 n_requests: int = 2, prompt_len: int = 8,
+                 max_new: int = 4, time_scale: float = 1.0,
+                 strategy=None, engine_config=None, cfg=None,
+                 seed: int = 0, ticks_per_chunk: int = 1,
+                 sim_tick_time: Optional[float] = 5.0):
+        super().__init__(clock, net, tbon_fanout=tbon_fanout,
+                         n_requests=n_requests, prompt_len=prompt_len,
+                         max_new=max_new, time_scale=time_scale,
+                         strategy=strategy, engine_config=engine_config,
+                         cfg=cfg)
+        self.replicas = max(replicas, 1)
+        self.nodes_per_replica = max(nodes_per_replica, 1)
+        self.tenant = tenant
+        self.ttft_slo_s = ttft_slo_s or None
+        self.seed = seed
+        self.ticks_per_chunk = max(ticks_per_chunk, 1)
+        self.sim_tick_time = sim_tick_time
+        self.mc = None
+        self.sessions: Dict[int, _FleetSession] = {}
+        self._params: Dict[str, object] = {}     # cfg name -> init params
+        self.phase_cb = None
+        # optional obs.trace.Tracer: scale/promotion become events on
+        # the trace ``promo-<jobid>`` (sim axis, wall costs in attrs)
+        self.tracer = None
+
+    # -- reconciler event plumbing -----------------------------------------
+    def bind(self, minicluster) -> "ElasticFleetServeExecutor":
+        """Subscribe to the MiniCluster's resize events."""
+        self.mc = minicluster
+        minicluster.on_resize.append(self._on_resize)
+        return self
+
+    def _on_resize(self, new_size: int, source: str):
+        """Graceful window.  A grow records a pending replica target to
+        apply at the next tick boundary (once the new ranks boot); a
+        shrink only clamps the spec — if the reconciler tears down
+        hosts this fleet holds, the requeue path rebuilds it."""
+        if self.mc is not None:
+            clamp_queued_jobs(self.mc.instance, new_size)
+        npr = self.nodes_per_replica
+        for ses in self.sessions.values():
+            job = ses.job
+            if job.state != JobState.RUN:
+                continue
+            want = max(1, new_size // npr)
+            have = (len(ses.router.engines) if ses.router is not None
+                    else self.replicas)
+            job.spec.n_nodes = want * npr
+            if want > have:
+                ses.pending_replicas = want
+                ses.pending_source = source
+                if self.phase_cb is not None:
+                    self.phase_cb(job.jobid, "Resizing",
+                                  target_replicas=want, source=source)
+
+    # -- engine construction -------------------------------------------------
+    def _host_params(self, cfg):
+        params = self._params.get(cfg.name)
+        if params is None:
+            import jax
+            from repro.models import Model
+            params = Model(cfg).init(jax.random.PRNGKey(self.seed))
+            self._params[cfg.name] = params
+        return params
+
+    def _slices(self, rset: ResourceSet,
+                replicas: int) -> List[ResourceSet]:
+        """Pod-major consecutive host groups, one per replica."""
+        npr = self.nodes_per_replica
+        assert rset.n_hosts == replicas * npr, \
+            (rset.n_hosts, replicas, npr)
+        out = []
+        for r in range(replicas):
+            lo, hi = r * npr, (r + 1) * npr
+            out.append(ResourceSet(
+                hosts=tuple(rset.hosts[lo:hi]),
+                chips_per_host=rset.chips_per_host,
+                pods=tuple(rset.pods[lo:hi]) if rset.pods else ()))
+        return out
+
+    def _build_engine(self, ses: _FleetSession, mesh, params=None):
+        """One warmed replica engine.  The warm request compiles the
+        step functions outside timing (the shared executor contract);
+        every replica — including reference runs and promoted engines
+        before they adopt a snapshot — warms identically, so warmup
+        never perturbs token identity."""
+        from repro.configs import BASELINE
+        from repro.serve import Engine
+        eng = Engine(ses.cfg, ses.ecfg,
+                     strategy=self.strategy or BASELINE, mesh=mesh,
+                     params=params if params is not None else ses.params,
+                     seed=self.seed)
+        warm = eng.submit(
+            [1] * min(self.prompt_len, ses.ecfg.max_prompt_len),
+            max_new_tokens=2)
+        eng.run()
+        assert warm.finished
+        return eng
+
+    # -- request API --------------------------------------------------------
+    def submit_request(self, job: Job, prompt, max_new: int = None,
+                       temperature: float = 0.0, tenant: str = None,
+                       ttft_slo_s: float = None):
+        """Submit one request to a live fleet job.  Arrivals before the
+        first placement queue and are admitted on the first tick."""
+        from repro.serve.scheduler import Request
+        ses = self._session(job)
+        req = Request(prompt=list(prompt),
+                      max_new_tokens=(self.max_new if max_new is None
+                                      else max_new),
+                      temperature=temperature,
+                      tenant=self.tenant if tenant is None else tenant,
+                      ttft_slo_s=(self.ttft_slo_s if ttft_slo_s is None
+                                  else ttft_slo_s) or None)
+        ses.requests.append(req)
+        ses.min_total += 1
+        if ses.router is not None:
+            req.t_created = ses.router.clock.now()
+            ses.router.enqueue(req)
+        else:
+            ses.arrivals.append(req)
+        return req
+
+    # -- session management -------------------------------------------------
+    def _session(self, job: Job) -> _FleetSession:
+        ses = self.sessions.get(job.jobid)
+        if ses is not None:
+            return ses
+        from repro.serve import EngineConfig
+        cfg = self.cfg or smoke_config_for(job.spec.command)
+        ecfg = self.engine_config or EngineConfig(
+            n_slots=4, page_size=8, max_seq_len=64, max_prompt_len=16)
+        ses = _FleetSession(job=job, cfg=cfg, ecfg=ecfg)
+        self.sessions[job.jobid] = ses
+        return ses
+
+    # -- placement: (re)build the fleet on this allocation ------------------
+    def __call__(self, job: Job, rset: ResourceSet, done):
+        from repro.dist.sharding import submesh_for
+        from repro.serve import Router
+        from repro.serve.scheduler import WAITING
+
+        ses = self._session(job)
+        ses.generation += 1
+        gen = ses.generation
+        if ses.params is None:
+            ses.params = self._host_params(ses.cfg)
+        if ses.promo is not None:
+            # a requeue mid-promotion aborts the roll: the rebuilt fleet
+            # serves the OLD params uniformly (promote again to retry)
+            ses.promo["rec"]["aborted"] = True
+            ses.promotions.append(ses.promo["rec"])
+            ses.promo = None
+        replicas = max(1, rset.n_hosts // self.nodes_per_replica)
+        slices = self._slices(rset, replicas)
+        engines = [self._build_engine(ses, submesh_for(sub))
+                   for sub in slices]
+        router = Router(engines, tracer=self.tracer)
+        ses.rsets = slices
+        if gen == 1:
+            from repro.serve.scheduler import Request
+            vocab = ses.cfg.vocab_size
+            plen = min(self.prompt_len, ses.ecfg.max_prompt_len)
+            prompts = job.spec.args.get("prompts")
+            if prompts is None:
+                n = int(job.spec.args.get("n_requests", self.n_requests))
+                prompts = [[(7 * i + j) % vocab for j in range(plen)]
+                           for i in range(n)]
+            max_new = int(job.spec.args.get("max_new", self.max_new))
+            temp = float(job.spec.args.get("temperature", 0.0))
+            tenant = str(job.spec.args.get("tenant", self.tenant))
+            slo = job.spec.args.get("ttft_slo_s", self.ttft_slo_s) or None
+            initial = [
+                Request(prompt=list(p)[:ses.ecfg.max_prompt_len],
+                        max_new_tokens=max_new, temperature=temp,
+                        tenant=tenant, ttft_slo_s=slo)
+                for p in prompts]
+            ses.requests[:0] = initial
+            ses.min_total += len(initial)
+        else:
+            # fault-path requeue: the pools died with the old placement,
+            # so unfinished requests restart from their prompt (tokens
+            # regenerate; only scale-up and promotion are pinned
+            # lossless — a lost host is a real failure)
+            for req in ses.requests:
+                if not req.finished:
+                    req.tokens.clear()
+                    req.state = WAITING
+                    req.slot = None
+                    req.t_first = None
+        for req in ses.requests:
+            if not req.finished:
+                req.t_created = router.clock.now()
+                router.enqueue(req)
+        ses.arrivals = []               # all live requests queued above
+        ses.router = router
+        if (ses.pending_replicas is not None
+                and replicas >= ses.pending_replicas):
+            ses.pending_replicas = None
+        self.clock.trace("fleet_place", jobid=job.jobid,
+                         replicas=replicas, hosts=list(rset.hosts))
+        if self.phase_cb is not None and gen > 1:
+            self.phase_cb(job.jobid, "Running", replicas=replicas)
+        boot = tbon_bootstrap_cost(self.net, rset.n_hosts, self.k)
+        self.clock.call_in(boot, self._tick, job, ses, gen, done)
+
+    # -- live scale-up at a tick boundary -----------------------------------
+    def _try_scale(self, job: Job, ses: _FleetSession):
+        """Add replicas toward the pending target, one engine per free
+        ``nodes_per_replica`` host group.  Partial progress is fine —
+        the target stays pending until the cluster can supply the
+        rest."""
+        if ses.pending_replicas is None or ses.router is None:
+            return
+        from repro.dist.sharding import submesh_for
+        graph = self.mc.instance.graph
+        npr = self.nodes_per_replica
+        while len(ses.router.engines) < ses.pending_replicas:
+            rset = graph.match(npr, policy=self.mc.instance.match_policy,
+                               same_pod=True)
+            if rset is None:
+                rset = graph.match(npr,
+                                   policy=self.mc.instance.match_policy)
+            if rset is None:
+                return                  # new ranks still booting
+            graph.alloc(rset, job.jobid)
+            old = job.allocation
+            job.allocation = ResourceSet(
+                hosts=tuple(old.hosts) + tuple(rset.hosts),
+                chips_per_host=old.chips_per_host,
+                pods=(tuple(old.pods) + tuple(rset.pods)
+                      if old.pods and rset.pods else ()))
+            eng = self._build_engine(ses, submesh_for(rset))
+            idx = ses.router.add_engine(eng)
+            ses.rsets.append(rset)
+            ses.scale_events.append({
+                "t_sim": self.clock.now, "replica": idx,
+                "hosts": list(rset.hosts),
+                "source": ses.pending_source,
+                "replicas": len(ses.router.engines)})
+            self.clock.trace("fleet_scale_up", jobid=job.jobid,
+                             replica=idx, hosts=list(rset.hosts))
+            if self.tracer is not None:
+                self.tracer.event("scale_up", f"promo-{job.jobid}",
+                                  t=self.clock.now, replica=idx,
+                                  replicas=len(ses.router.engines))
+        ses.pending_replicas = None
+        if self.phase_cb is not None:
+            self.phase_cb(job.jobid, "Running",
+                          replicas=len(ses.router.engines))
+
+    # -- rolling canary promotion -------------------------------------------
+    def promote(self, job: Job, params, note: str = "",
+                on_done: Callable = None) -> Dict:
+        """Begin rolling NEW params into the live fleet, one replica
+        per tick.  Returns the (mutable) promotion record; ``on_done``
+        fires with it once every replica runs the new version."""
+        ses = self._session(job)
+        if ses.promo is not None:
+            raise RuntimeError(
+                f"job {job.jobid}: promotion already in progress")
+        n_rep = len(ses.router.engines) if ses.router is not None else 0
+        in_flight = (sum(len(e.scheduler.running)
+                         for e in ses.router.engines)
+                     if ses.router is not None else 0)
+        rec = {
+            "note": note,
+            "from_version": ses.version,
+            "to_version": ses.version + 1,
+            "t_begin_sim": self.clock.now,
+            "replicas_at_begin": n_rep,
+            "in_flight_at_begin": in_flight,
+            "steps": [],
+        }
+        ses.promo = {"params": params, "next": 0, "rec": rec,
+                     "on_done": on_done}
+        router = ses.router
+        if router is not None and router.prefix_cache is not None:
+            # cached KV was computed under the OLD params — drop it
+            rec["prefix_cache_dropped"] = True
+            router.prefix_cache = None
+            for eng in router.engines:
+                eng.prefix_cache = None
+        self.clock.trace("promote_begin", jobid=job.jobid,
+                         replicas=n_rep, in_flight=in_flight)
+        if self.tracer is not None:
+            self.tracer.event("promote_begin", f"promo-{job.jobid}",
+                              t=self.clock.now, note=note,
+                              replicas=n_rep, in_flight=in_flight)
+        return rec
+
+    def _promote_step(self, job: Job, ses: _FleetSession):
+        """Promote ONE replica: freeze it, build+warm an engine with
+        the new params on the same mesh, adopt the snapshot, swap it
+        into the router.  In-flight requests ride the snapshot."""
+        promo = ses.promo
+        if promo is None or ses.router is None:
+            return
+        router, i = ses.router, promo["next"]
+        if i >= len(router.engines):
+            rec = promo["rec"]
+            rec["t_done_sim"] = self.clock.now
+            rec["sim_promote_s"] = self.clock.now - rec["t_begin_sim"]
+            rec["replicas"] = len(router.engines)
+            ses.params = promo["params"]
+            ses.version = rec["to_version"]
+            ses.promotions.append(rec)
+            ses.promo = None
+            self.clock.trace("promote_done", jobid=job.jobid,
+                             version=ses.version,
+                             sim_promote_s=rec["sim_promote_s"])
+            if self.tracer is not None:
+                self.tracer.event("promote_done", f"promo-{job.jobid}",
+                                  t=self.clock.now, version=ses.version,
+                                  sim_promote_s=rec["sim_promote_s"])
+            if promo["on_done"] is not None:
+                promo["on_done"](rec)
+            return
+        eng = router.engines[i]
+        in_flight = len(eng.scheduler.running)
+        waiting = len(eng.scheduler.waiting)
+        snap = eng.snapshot_state()
+        # tokens generated per request at the swap point: everything up
+        # to here came from the OLD params — the prefix-identity pin
+        progress = {r.rid: len(r.tokens)
+                    for r in (list(snap["running"].values())
+                              + list(snap["waiting"]))}
+        new_eng = self._build_engine(ses, eng.mesh,
+                                     params=promo["params"])
+        new_eng.adopt_state(snap)
+        router.swap_engine(i, new_eng)
+        promo["next"] = i + 1
+        promo["rec"]["steps"].append({
+            "replica": i, "t_sim": self.clock.now,
+            "in_flight": in_flight, "waiting": waiting,
+            "token_progress": progress})
+        self.clock.trace("promote_replica", jobid=job.jobid, replica=i,
+                         in_flight=in_flight)
+        if self.tracer is not None:
+            self.tracer.event("promote_replica", f"promo-{job.jobid}",
+                              t=self.clock.now, replica=i,
+                              in_flight=in_flight, waiting=waiting)
+        if self.phase_cb is not None:
+            self.phase_cb(job.jobid, "Running", promoted_replica=i,
+                          in_flight=in_flight)
+
+    # -- the chunked fleet loop ---------------------------------------------
+    def _tick(self, job: Job, ses: _FleetSession, gen: int, done):
+        if gen != ses.generation or job.state != JobState.RUN:
+            return                     # superseded by a requeue
+        self._try_scale(job, ses)
+        self._promote_step(job, ses)
+        router = ses.router
+        t0 = time.perf_counter()
+        n = 0
+        for _ in range(self.ticks_per_chunk):
+            if not router.step():
+                break
+            n += 1
+            ses.ticks += 1
+        elapsed = time.perf_counter() - t0
+        served = sum(1 for r in ses.requests if r.finished)
+        idle = not router.has_work
+        if (idle and served >= ses.min_total and ses.promo is None
+                and ses.pending_replicas is None):
+            ttfts = [r.ttft for r in ses.requests if r.ttft is not None]
+            stats = router.stats()
+            self.ran[job.jobid] = {
+                "replicas": len(router.engines),
+                "nodes_per_replica": self.nodes_per_replica,
+                "mesh_shapes": [tuple(e.mesh.devices.shape)
+                                for e in router.engines],
+                "n_devices": sum(int(e.mesh.size)
+                                 for e in router.engines),
+                "hosts": (list(job.allocation.hosts)
+                          if job.allocation else []),
+                "n_requests": len(ses.requests),
+                "n_tokens": sum(len(r.tokens) for r in ses.requests),
+                "tokens": [list(r.tokens) for r in ses.requests],
+                "assignments": [router.assignments.get(r.rid)
+                                for r in ses.requests],
+                "ttft_mean_s": sum(ttfts) / max(len(ttfts), 1),
+                "ticks": ses.ticks,
+                "version": ses.version,
+                "promotions": ses.promotions,
+                "scale_events": ses.scale_events,
+                "n_prefills": stats["n_prefills"],
+                "prefix_cache": stats.get("prefix_cache"),
+                "desired_replicas": router.desired_replicas(),
             }
             dt = (self.sim_tick_time * max(n, 1)
                   if self.sim_tick_time is not None

@@ -54,6 +54,8 @@ class FluxInstance:
         # declarative submission path (repro.spec); created on first
         # apply() and installed as the executor dispatch
         self._workloads = None
+        # pipeline layer (repro.flow); created on first apply_pipeline()
+        self._pipelines = None
         # anti-starvation: once the top-priority unmatched job has
         # waited this long (sim seconds), stop backfilling smaller jobs
         # past it and let the cluster drain toward it
@@ -201,6 +203,24 @@ class FluxInstance:
             self._workloads = WorkloadReconciler(self)
         return self._workloads.apply(spec, cfg=cfg, strategy=strategy,
                                      executor_opts=executor_opts)
+
+    def apply_pipeline(self, pspec, *, cfg=None, strategy=None,
+                       executor_opts=None, stage_opts=None):
+        """Reconcile a declarative :class:`repro.flow.PipelineSpec` —
+        a DAG of WorkloadSpecs with triggers, gates and canary
+        promotion — and return its
+        :class:`repro.flow.PipelineHandle`.  Validation (cycles,
+        unknown refs, per-stage cluster checks) happens HERE, in the
+        SpecError style; the DAG then walks event-driven off each
+        stage's WorkloadHandle transitions.  ``stage_opts`` maps stage
+        names to per-stage ``cfg``/``strategy``/``executor_opts``
+        overrides."""
+        from repro.flow.reconcile import PipelineReconciler
+        if getattr(self, "_pipelines", None) is None:
+            self._pipelines = PipelineReconciler(self)
+        return self._pipelines.apply(pspec, cfg=cfg, strategy=strategy,
+                                     executor_opts=executor_opts,
+                                     stage_opts=stage_opts)
 
     # -- deprecated imperative executor attachment ------------------------------
     def _deprecated(self, name: str):

@@ -280,6 +280,12 @@ class FluxMiniCluster:
         workloads ride our ``on_resize`` events automatically)."""
         return self.instance.apply(spec, **kw)
 
+    def apply_pipeline(self, pspec, **kw):
+        """Apply a declarative :class:`repro.flow.PipelineSpec` to this
+        MiniCluster's instance: a DAG of workload stages with triggers,
+        gates and rolling canary promotion into live serve fleets."""
+        return self.instance.apply_pipeline(pspec, **kw)
+
     def attach_elastic_executor(self, **kwargs):
         """Deprecated shim: ``apply(WorkloadSpec(kind="train",
         resources=ResourceSpec(elastic=True)))`` — kept only so old

@@ -1,0 +1,18 @@
+"""Workload pipelines: DAG-composed WorkloadSpecs with triggers,
+gates, and canary checkpoint promotion — the batch-workflow layer the
+Flux Operator paper frames the operator as the convergence point for.
+"""
+from repro.flow.handle import (COMPLETED, FAILED, PENDING, RUNNING,
+                               SKIPPED, PipelineHandle, StageState)
+from repro.flow.loader import check_pipeline, is_pipeline_doc, load_pipeline
+from repro.flow.reconcile import PipelineReconciler
+from repro.flow.spec import (GATE_METRICS, GateSpec, PipelineSpec,
+                             PromoteSpec, StageSpec, TriggerSpec)
+
+__all__ = [
+    "PipelineSpec", "StageSpec", "TriggerSpec", "GateSpec",
+    "PromoteSpec", "GATE_METRICS", "PipelineHandle", "StageState",
+    "PipelineReconciler", "load_pipeline", "check_pipeline",
+    "is_pipeline_doc", "PENDING", "RUNNING", "COMPLETED", "FAILED",
+    "SKIPPED",
+]

@@ -11,9 +11,9 @@ Three pieces, consumed across the serve/comm/operator tiers:
   event logs, and the common BENCH provenance header.
 """
 from repro.obs.export import (events_from_sim, provenance,  # noqa: F401
-                              spans_from_handle, to_chrome_trace,
-                              write_chrome_trace, write_jsonl,
-                              write_metrics)
+                              spans_from_handle, spans_from_pipeline,
+                              to_chrome_trace, write_chrome_trace,
+                              write_jsonl, write_metrics)
 from repro.obs.metrics import MetricsRegistry  # noqa: F401
 from repro.obs.trace import (REQUEST_SPANS, TTFT_SPANS, Clock,  # noqa: F401
                              SimTime, Span, TickClock, Tracer, WallClock,

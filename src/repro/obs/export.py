@@ -187,6 +187,48 @@ def spans_from_handle(handle, tracer: Optional[Tracer] = None) -> List[Span]:
     return out
 
 
+def spans_from_pipeline(phandle, tracer: Optional[Tracer] = None
+                        ) -> List[Span]:
+    """One pipeline's lifecycle as span timelines: the pipeline-level
+    phases land on trace ``pipe-<pid>`` and every stage's phases on
+    ``pipe-<pid>/<stage>`` (one Perfetto row per stage — the DAG reads
+    as a gantt chart).  Non-phase records (armed, workload_event,
+    retry, fire_suppressed, promote_started, ...) become instants.
+    Derived from ``PipelineHandle.events()`` so the flow tier needs no
+    tracer of its own."""
+    from repro.flow.handle import STAGE_PHASES
+    tr = tracer if tracer is not None else Tracer()
+    per: Dict[str, List[Dict[str, Any]]] = {}
+    top: List[Dict[str, Any]] = []
+    for ev in phandle.events():
+        stage = ev.get("stage")
+        (per.setdefault(stage, []) if stage else top).append(ev)
+    out: List[Span] = []
+
+    def lift(trace: str, evs: List[Dict[str, Any]]):
+        prev = None                      # (phase, t, detail)
+        for ev in evs:
+            phase = ev["phase"]
+            detail = {k: v for k, v in ev.items()
+                      if k not in ("t", "phase", "stage")}
+            if phase in STAGE_PHASES:
+                if prev is not None:
+                    out.append(tr.span(prev[0].lower(), trace, prev[1],
+                                       ev["t"], **prev[2]))
+                prev = (phase, ev["t"], detail)
+            else:
+                tr.event(phase.lower(), trace, t=ev["t"], **detail)
+        if prev is not None:
+            # terminal phase: zero-length closing span at its own stamp
+            out.append(tr.span(prev[0].lower(), trace, prev[1], prev[1],
+                               **prev[2]))
+
+    lift(f"pipe-{phandle.pid}", top)
+    for stage in sorted(per):
+        lift(f"pipe-{phandle.pid}/{stage}", per[stage])
+    return out
+
+
 def events_from_sim(sim_clock, tracer: Optional[Tracer] = None,
                     kinds: Optional[Iterable[str]] = None) -> int:
     """Lift ``SimClock.trace()`` records (elastic_ckpt, serve_park,

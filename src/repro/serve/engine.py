@@ -218,6 +218,60 @@ class Engine:
         self.n_generated = 0
         self.prefix_cache = None      # set by a fleet Router (fleet.py)
 
+    # -- park / adopt (elastic + canary promotion machinery) ----------------
+    def snapshot_state(self) -> dict:
+        """Freeze the engine's entire decode state host-side: the paged
+        KV pool, the allocator's block table / lengths / free lists,
+        the scheduler queues, each slot's next token, the sampling key
+        and the compute counters.  The snapshot is mesh-agnostic (host
+        arrays + plain Python bookkeeping), so a shape-identical engine
+        on ANY mesh — or with DIFFERENT params, the canary-promotion
+        path — can :meth:`adopt_state` it and resume in-flight requests
+        at the exact token they were parked at."""
+        al, sch = self.alloc, self.scheduler
+        return {
+            "pool": jax.device_get(self.pool),
+            "block_table": al.block_table.copy(),
+            "lengths": al.lengths.copy(),
+            "reserved": al._reserved.copy(),
+            "free_pages": list(al.free_pages),
+            "free_slots": list(al.free_slots),
+            "waiting": list(sch.waiting),
+            "prefilling": list(getattr(sch, "prefilling", ())),
+            "running": dict(sch.running),
+            "n_finished": sch.n_finished,
+            "next_token": self._next_token.copy(),
+            "key": jax.device_get(self._key),
+            "counters": (self.n_prefills, self.n_decode_steps,
+                         self.n_generated),
+        }
+
+    def adopt_state(self, snap: dict) -> None:
+        """Adopt a :meth:`snapshot_state` snapshot: the pool reshards
+        onto this engine's mesh via ``device_put`` and the host
+        bookkeeping copies over.  Because parking freezes the tick
+        stream rather than replaying it (the sampling key rides the
+        snapshot), generated tokens stay token-for-token identical to
+        an uninterrupted run at any temperature."""
+        from collections import deque
+        p = snap
+        self.pool = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), p["pool"], self._pool_sh)
+        al, sch = self.alloc, self.scheduler
+        al.block_table[:] = p["block_table"]
+        al.lengths[:] = p["lengths"]
+        al._reserved[:] = p["reserved"]
+        al.free_pages = list(p["free_pages"])
+        al.free_slots = list(p["free_slots"])
+        sch.waiting = deque(p["waiting"])
+        sch.prefilling = deque(p.get("prefilling", ()))
+        sch.running = dict(p["running"])
+        sch.n_finished = p["n_finished"]
+        self._next_token[:] = p["next_token"]
+        self._key = jnp.asarray(p["key"])
+        self.n_prefills, self.n_decode_steps, self.n_generated = \
+            p["counters"]
+
     # -- request API --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
                temperature: float = 0.0, eos_id: Optional[int] = None,

@@ -197,6 +197,7 @@ class Router:
         self._dispatched: Dict[int, Request] = {}    # rid -> in-flight
         self._submitted: set = set()                 # every rid ever seen
         self._registered: set = set()                # rids prefix-registered
+        self.assignments: Dict[int, int] = {}        # rid -> engine index
         self.n_dispatched = 0
         self._demand = 0.0
         self._demand_alpha = demand_alpha
@@ -210,18 +211,54 @@ class Router:
                       temperature=temperature, eos_id=eos_id,
                       tenant=tenant, ttft_slo_s=ttft_slo_s,
                       t_created=self.clock.now())
-        # validate against engine shapes at router-submit time, so an
-        # unservable request fails HERE, not after queueing
+        return self.enqueue(req)
+
+    def enqueue(self, req: Request) -> Request:
+        """Queue an externally constructed :class:`Request` (the
+        executor tier builds requests before a router exists — e.g.
+        arrivals queued while an elastic fleet is still placing).
+        Validates against engine shapes at router-submit time, so an
+        unservable request fails HERE, not after queueing."""
         errors = self.engines[0].scheduler.check(req)
         if errors:
             raise SubmitError(errors)
         self.pending.append(req)
         self._submitted.add(req.rid)
-        self.metrics.inc("router_submits_total", tenant=tenant)
+        self.metrics.inc("router_submits_total", tenant=req.tenant)
         if self.tracer is not None:
             self.tracer.event("router_submit", f"req-{req.rid}",
-                              t=req.t_created, rid=req.rid, tenant=tenant)
+                              t=req.t_created, rid=req.rid,
+                              tenant=req.tenant)
         return req
+
+    # -- replica set mutation ------------------------------------------------
+    def add_engine(self, eng: Engine) -> int:
+        """Grow the replica set in place (elastic fleet scale-up): the
+        new engine joins dispatch on the next pass.  The shared prefix
+        cache stays attached only if the grown set still satisfies the
+        cacheability contract (chunked, attention-only, shape-identical
+        replicas); otherwise it detaches fleet-wide — correctness never
+        depends on a cache entry, so detaching is always safe."""
+        self.engines.append(eng)
+        if self.tracer is not None:
+            eng.tracer = self.tracer
+        if self.prefix_cache is not None and not _cacheable(self.engines):
+            self.prefix_cache = None
+        eng.prefix_cache = self.prefix_cache
+        self.metrics.set("router_replicas", len(self.engines))
+        return len(self.engines) - 1
+
+    def swap_engine(self, index: int, eng: Engine) -> Engine:
+        """Replace replica ``index`` in place (the canary-promotion
+        path: the new engine has ADOPTED the old one's snapshot, so
+        in-flight requests continue where they parked).  Returns the
+        replaced engine."""
+        old = self.engines[index]
+        self.engines[index] = eng
+        if self.tracer is not None:
+            eng.tracer = self.tracer
+        eng.prefix_cache = self.prefix_cache
+        return old
 
     # -- dispatch -----------------------------------------------------------
     def _in_flight(self) -> Dict[str, int]:
@@ -298,6 +335,7 @@ class Router:
             in_flight[req.tenant] = in_flight.get(req.tenant, 0) + 1
             self.n_dispatched += 1
             eng_idx = self.engines.index(eng)
+            self.assignments[req.rid] = eng_idx
             self.metrics.inc("router_dispatch_total", engine=eng_idx)
             if self.tracer is not None:
                 self.tracer.event("dispatch", f"req-{req.rid}", t=now,

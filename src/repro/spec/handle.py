@@ -48,20 +48,60 @@ class WorkloadHandle:
         self.phase = PENDING
         self._events: List[Dict[str, Any]] = [
             {"t": clock.now, "phase": PENDING, "jobid": job.jobid}]
+        self._listeners: List[Any] = []
+        self._result: Optional[Dict[str, Any]] = None
 
     # -- lifecycle ----------------------------------------------------------
+    def subscribe(self, cb) -> None:
+        """Register ``cb(handle, phase, detail)`` to fire on every
+        recorded event — transitions AND same-phase detail events.  The
+        pipeline reconciler walks its DAG off these callbacks."""
+        self._listeners.append(cb)
+
     def _transition(self, phase: str, **detail):
         if phase == self.phase:
             # same-phase event (e.g. progress detail): record, no edge
             self._events.append({"t": self.clock.now, "phase": phase,
                                  **detail})
-            return
-        if phase not in _EDGES[self.phase]:
-            raise ValueError(
-                f"illegal workload transition {self.phase} -> {phase} "
-                f"(job {self.job.jobid})")
-        self.phase = phase
-        self._events.append({"t": self.clock.now, "phase": phase, **detail})
+        else:
+            if phase not in _EDGES[self.phase]:
+                raise ValueError(
+                    f"illegal workload transition {self.phase} -> {phase} "
+                    f"(job {self.job.jobid})")
+            self.phase = phase
+            self._events.append({"t": self.clock.now, "phase": phase,
+                                 **detail})
+        for cb in list(self._listeners):
+            cb(self, phase, detail)
+
+    def result(self) -> Optional[Dict[str, Any]]:
+        """Summary dict stamped when the workload reaches a terminal
+        phase (None before then) — the stable surface pipeline gates
+        evaluate instead of scraping events.  Train workloads report
+        ``steps``/``final_loss``, serve workloads request counts,
+        dryrun the probed mesh."""
+        return dict(self._result) if self._result is not None else None
+
+    def _stamp_result(self, outcome: str) -> None:
+        out: Dict[str, Any] = {"outcome": outcome,
+                               "kind": self.spec.kind,
+                               "jobid": self.job.jobid}
+        rec = getattr(self.executor, "ran", {}).get(self.job.jobid)
+        if rec is not None:
+            if self.spec.kind == "train":
+                out["steps"] = rec.get(
+                    "steps", getattr(self.executor, "steps", None))
+                out["final_loss"] = rec.get("loss")
+            elif self.spec.kind == "serve":
+                out["n_requests"] = rec.get("n_requests")
+                out["n_tokens"] = rec.get("n_tokens")
+                out["ttft_mean_s"] = rec.get("ttft_mean_s")
+                if "replicas" in rec:
+                    out["replicas"] = rec["replicas"]
+            elif self.spec.kind == "dryrun":
+                out["n_devices"] = rec.get("n_devices")
+                out["mesh_shape"] = rec.get("mesh_shape")
+        self._result = out
 
     @property
     def done(self) -> bool:

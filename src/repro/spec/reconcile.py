@@ -228,6 +228,17 @@ class WorkloadReconciler:
             opts.setdefault("steps", spec.train.total_steps)
             ex = SubmeshExecutor(clock, net, seq_len=spec.train.seq_len,
                                  strategy=strategy, cfg=cfg, **opts)
+        elif (spec.kind == "serve" and spec.resources.elastic
+                and spec.serve.replicas > 1):
+            from repro.core.executor import ElasticFleetServeExecutor
+            s = spec.serve
+            ex = ElasticFleetServeExecutor(
+                clock, net, replicas=s.replicas,
+                nodes_per_replica=spec.resources.n_nodes,
+                n_requests=s.n_requests, max_new=s.max_new,
+                tenant=s.tenant, ttft_slo_s=s.ttft_slo_s,
+                strategy=strategy, engine_config=spec.engine_config(),
+                cfg=cfg, **opts).bind(mc)
         elif spec.kind == "serve" and spec.resources.elastic:
             from repro.core.executor import ElasticServeExecutor
             s = spec.serve
@@ -274,6 +285,9 @@ class WorkloadReconciler:
             # terminal, or the re-placement would be an illegal
             # transition out of Completed
             if job.state == JobState.RUN:
+                # stamp BEFORE the transition so terminal-phase
+                # listeners (pipeline gates) see handle.result()
+                handle._stamp_result(result)
                 handle._transition(COMPLETED if result == "completed"
                                    else FAILED, result=result)
             done(result, walltime)

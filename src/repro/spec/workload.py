@@ -303,12 +303,6 @@ class WorkloadSpec:
                              "tenant must be a non-empty string"))
         if not ok:
             return errs                 # derived checks need sane values
-        if s.replicas > 1 and self.resources.elastic:
-            errs.append(_err(
-                "serve.replicas", "unsupported",
-                "replicas > 1 with resources.elastic is not supported: "
-                "the fleet scales by replica count (the autoscaler "
-                "signal), not by resizing one engine in place"))
         if s.dp_shards > 1 and s.n_slots % s.dp_shards:
             errs.append(_err("serve.dp_shards", "bad-value",
                              f"dp_shards={s.dp_shards} must divide "

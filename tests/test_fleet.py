@@ -268,11 +268,11 @@ def test_spec_validates_fleet_fields():
     assert any(e["field"] == "serve.tenant" for e in errs)
     errs = _fleet_spec(ttft_slo_s=-1.0).errors()
     assert any(e["field"] == "serve.ttft_slo_s" for e in errs)
-    bad = WorkloadSpec(kind="serve", arch="yi-6b",
-                       resources=ResourceSpec(n_nodes=1, elastic=True),
-                       serve=ServeSpec(replicas=2))
-    assert any(e["field"] == "serve.replicas" and e["code"] == "unsupported"
-               for e in bad.errors())
+    # elastic + replicas > 1 is the live-resizable fleet (PR 10): valid
+    ok = WorkloadSpec(kind="serve", arch="yi-6b",
+                      resources=ResourceSpec(n_nodes=1, elastic=True),
+                      serve=ServeSpec(replicas=2))
+    assert ok.errors() == []
 
 
 def test_apply_fleet_spec_binds_replicated_engines():
@@ -294,3 +294,58 @@ def test_apply_fleet_spec_binds_replicated_engines():
     assert ran["n_requests"] == 4
     assert ran["n_tokens"] >= 4
     assert ran["desired_replicas"] >= 1
+
+
+def test_fleet_demand_policy_resizes_live_fleet_end_to_end():
+    """The full loop: a demand spike raises Router.desired_replicas,
+    FleetDemandPolicy maps it to hosts, the Autoscaler PATCHes the
+    MiniCluster, and the LIVE elastic fleet gains a replica at the next
+    tick boundary — no requeue, no dropped request."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 sim devices")
+    clock, mc = _mini_cluster(size=2, max_size=3)
+    spec = WorkloadSpec(
+        kind="serve", arch="yi-6b", name="live-fleet",
+        resources=ResourceSpec(n_nodes=1, elastic=True),
+        serve=ServeSpec(n_slots=2, max_new=6, page_size=8,
+                        max_prompt_len=8, max_seq_len=16,
+                        n_requests=2, replicas=2))
+    h = mc.apply(spec, cfg=TINY, executor_opts=dict(sim_tick_time=5.0))
+    ex, job = h.executor, h.job
+    clock.run(until=clock.now + 50_000.0,
+              stop_when=lambda: job.jobid in ex.sessions
+              and ex.sessions[job.jobid].router is not None)
+    ses = ex.sessions[job.jobid]
+    assert len(ses.router.engines) == 2
+
+    class LiveRouter:                  # the policy reads the CURRENT
+        def desired_replicas(self, t):  # router (rebuilt on requeue)
+            return ex.sessions[job.jobid].router.desired_replicas(t)
+
+    sc = Autoscaler(clock, mc,
+                    FleetDemandPolicy(router=LiveRouter(),
+                                      nodes_per_replica=1,
+                                      min_size=2, max_size=3),
+                    interval=10.0, stabilization=100_000.0)
+    sc.start()
+    spike = [h.submit_request([1 + i, 2, 3], max_new_tokens=6)
+             for i in range(8)]
+    clock.run(until=clock.now + 50_000.0,
+              stop_when=lambda: len(ses.router.engines) >= 3)
+    assert len(ses.router.engines) == 3, \
+        "demand spike must add a live replica via the autoscaler"
+    assert h.phase in ("Resizing", "Running")
+    sc.stop()
+    clock.run(until=clock.now + 100_000.0,
+              stop_when=lambda: job.state == JobState.INACTIVE)
+    assert h.phase == "Completed", h.conditions
+    assert all(r.finished and len(r.tokens) == 6 for r in spike)
+    rec = ex.ran[job.jobid]
+    assert rec["replicas"] == 3
+    assert rec["scale_events"] and \
+        rec["scale_events"][-1]["replicas"] == 3
+    assert rec["n_requests"] == 10
+    assert all(len(t) == 6 for t in rec["tokens"])
+    # the stamped result surfaces the grown fleet (satellite: result())
+    res = h.result()
+    assert res["outcome"] == "completed" and res["replicas"] == 3

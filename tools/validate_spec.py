@@ -1,10 +1,13 @@
-"""Lint WorkloadSpec JSON files against the schema.
+"""Lint WorkloadSpec and PipelineSpec JSON files against the schema.
 
-Committed example specs must never drift from the WorkloadSpec schema:
-this tool strict-parses each file (unknown keys are errors, not silent
-drops), runs full structural validation, and checks the
-``to_dict``/``from_dict`` round-trip.  CI runs it over
-``examples/specs/*.json``; non-zero exit on any error.
+Committed example specs must never drift from the schema: this tool
+strict-parses each file (unknown keys are errors, not silent drops),
+runs full structural validation, and checks the
+``to_dict``/``from_dict`` round-trip.  Pipeline documents (``kind:
+"pipeline"`` or a top-level ``stages`` list) route through the flow
+tier's validator — cycles, unknown stage refs, unknown triggers, and
+gate/promote kind-compatibility are all apply-time errors here too.
+CI runs it over ``examples/specs/*.json``; non-zero exit on any error.
 
     PYTHONPATH=src python tools/validate_spec.py \
         --spec examples/specs/*.json
@@ -30,9 +33,30 @@ def main() -> int:
             return 2
         paths.extend(hits)
 
+    import json
+
+    from repro.flow import check_pipeline, is_pipeline_doc
     from repro.spec import check_spec
     failed = 0
     for path in paths:
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except Exception:
+            raw = None
+        if is_pipeline_doc(raw):
+            pspec, errors = check_pipeline(path)
+            if errors:
+                failed += 1
+                print(f"[validate_spec] FAIL {path}:")
+                for e in errors:
+                    print(f"  - {e['field']}: {e['message']} [{e['code']}]")
+            else:
+                kinds = ",".join(s.kind for s in pspec.stages)
+                print(f"[validate_spec] ok   {path} "
+                      f"(kind=pipeline, name={pspec.name}, "
+                      f"stages={len(pspec.stages)} [{kinds}])")
+            continue
         spec, errors = check_spec(path)
         if errors:
             failed += 1
